@@ -1,0 +1,40 @@
+"""Shared benchmark utilities.
+
+Every benchmark returns rows of (name, us_per_call, derived) where
+us_per_call is the wall-time per unit of work and ``derived`` is the
+figure-specific metric (RMSE, throughput ratio, ...).  ``run.py`` prints
+them as CSV — one benchmark per paper table/figure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # microseconds
+
+
+def small_netflix(seed=0, k=8):
+    """Netflix-shaped problem small enough for CPU benchmarking."""
+    from repro.data.synthetic import synthetic_ratings, train_test_split
+    rows, cols, vals, _, _ = synthetic_ratings(
+        600, 120, 24_000, k=k, seed=seed, noise=0.05)
+    train, test = train_test_split(rows, cols, vals, 0.1, seed=1)
+    return dict(m=600, n=120, k=k, train=train, test=test,
+                nnz=len(train[0]))
+
+
+def fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,60 @@
+"""§Dry-run summary table: every (arch x shape x mesh) cell's compile
+status and per-device memory, including documented long_500k skips."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs  # noqa: E402
+from benchmarks.roofline import ART  # noqa: E402
+
+
+def cell_rec(arch, shape, mesh):
+    path = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def markdown() -> str:
+    lines = ["| arch | shape | 16x16 | GB/dev (args+temp) | 2x16x16 | "
+             "GB/dev (args+temp) |",
+             "|---|---|---|---|---|---|"]
+    for arch, shape, skip in configs.cells():
+        if skip:
+            lines.append(f"| {arch} | {shape} | SKIP (full attention at "
+                         f"500k; DESIGN.md §6) | — | SKIP | — |")
+            continue
+        cols = []
+        for mesh in ("16x16", "2x16x16"):
+            r = cell_rec(arch, shape, mesh)
+            if r is None:
+                cols += ["MISSING", "—"]
+            else:
+                gb = (r["memory"]["argument_size_in_bytes"]
+                      + r["memory"]["temp_size_in_bytes"]) / 1e9
+                cols += ["PASS", f"{gb:.1f}"]
+        lines.append(f"| {arch} | {shape} | {cols[0]} | {cols[1]} | "
+                     f"{cols[2]} | {cols[3]} |")
+    # the paper's own engine
+    for ds in ("netflix", "yahoo", "hugewiki"):
+        for p, mesh in ((256, "epoch_p256"), (512, "epoch_p512")):
+            path = os.path.join(ART, f"nomad_mc_{ds}__{mesh}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    r = json.load(f)
+                gb = (r["memory"]["argument_size_in_bytes"]
+                      + r["memory"]["temp_size_in_bytes"]) / 1e9
+                wire = r["collectives"]["wire_bytes_per_device"] / 1e6
+                lines.append(
+                    f"| nomad_mc ({ds}) | ring epoch p={p} | PASS | "
+                    f"{gb:.2f} | wire {wire:.1f} MB/dev | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks (CPU: XLA path timed for real, Pallas path in
+interpret mode validated-only — TPU wall-clock is out of scope here; the
+kernels' roofline behaviour is covered by §Roofline instead)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from .common import timed
+
+
+def kernel_rows() -> list:
+    rng = np.random.default_rng(0)
+    out = []
+
+    # NOMAD block SGD: XLA oracle throughput (updates/sec on CPU)
+    m_t, n_t, k, nnz = 512, 256, 100, 8192
+    W = jnp.asarray(rng.normal(size=(m_t, k)), jnp.float32)
+    H = jnp.asarray(rng.normal(size=(n_t, k)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, m_t, nnz), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n_t, nnz), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=nnz), jnp.float32)
+    mask = jnp.ones(nnz, bool)
+    fn = jax.jit(ref.block_sgd_ref)
+    fn(W, H, rows, cols, vals, mask, 0.01, 0.05)[0].block_until_ready()
+    _, us = timed(lambda: fn(W, H, rows, cols, vals, mask, 0.01,
+                             0.05)[0].block_until_ready(), repeat=3)
+    out.append(("kernel/nomad_sgd_xla", us / nnz,
+                f"updates_per_s={nnz / (us / 1e6):.0f}"))
+
+    # flash attention XLA path
+    from repro.models.flash_xla import flash_attention_xla
+    B, Hq, Hkv, S, D = 1, 8, 2, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, D)) * 0.3, jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B, Hkv, S, D)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)), jnp.float32)
+    fa = jax.jit(lambda a, b, c: flash_attention_xla(a, b, c, True, 256))
+    fa(q, kk, v).block_until_ready()
+    _, us = timed(lambda: fa(q, kk, v).block_until_ready(), repeat=3)
+    flops = 2 * 2 * B * Hq * S * S // 2 * D
+    out.append(("kernel/flash_attn_xla", us,
+                f"gflops_cpu={flops / (us / 1e6) / 1e9:.2f}"))
+    return out

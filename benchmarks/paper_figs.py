@@ -1,0 +1,186 @@
+"""Benchmarks reproducing the paper's figures at laptop scale.
+
+Figure map (paper -> function):
+  Fig 5  single-machine RMSE-vs-time          -> fig5_single_machine
+  Fig 6  throughput vs #cores                 -> fig6_throughput
+  Fig 7  RMSE vs total CPU time (speedup)     -> fig7_speedup
+  Fig 8  HPC-cluster comparison               -> fig8_distributed('hpc')
+  Fig 11 commodity-cluster comparison         -> fig8_distributed('commodity')
+  Fig 10/16 machine-scaling throughput        -> fig10_machine_scaling
+  Fig 12 weak scaling (data + machines grow)  -> fig12_weak_scaling
+  Fig 13 lambda sweep                         -> fig13_lambda
+  Fig 14 latent-dimension sweep               -> fig14_rank
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import baselines, nomad, objective
+from repro.core.async_sim import NomadSimulator, SimConfig, simulate_dsgd
+from repro.core.stepsize import PowerSchedule
+
+from .common import Row, small_netflix, timed
+
+
+_SCHED = PowerSchedule(alpha=0.1, beta=0.02)
+
+
+def fig5_single_machine() -> list:
+    """NOMAD vs Hogwild(FPSGD-style) vs CCD++ on one machine: final test
+    RMSE and time per epoch."""
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    out = []
+    runs = {
+        "nomad": lambda: nomad.fit(rows, cols, vals, pr["m"], pr["n"],
+                                   pr["k"], p=4, lam=0.01, schedule=_SCHED,
+                                   epochs=8, test=pr["test"])[2],
+        "hogwild": lambda: baselines.hogwild(
+            rows, cols, vals, pr["m"], pr["n"], pr["k"], lam=0.01,
+            schedule=_SCHED, epochs=8, test=pr["test"])[2],
+        "ccdpp": lambda: baselines.ccdpp(
+            rows, cols, vals, pr["m"], pr["n"], pr["k"], lam=0.01,
+            epochs=8, test=pr["test"])[2],
+        "als": lambda: baselines.als(
+            rows, cols, vals, pr["m"], pr["n"], pr["k"], lam=0.01,
+            epochs=8, test=pr["test"])[2],
+    }
+    for name, fn in runs.items():
+        trace, us = timed(fn)
+        out.append((f"fig5/{name}", us / 8,
+                    f"final_test_rmse={trace[-1][1]:.4f}"))
+    return out
+
+
+def fig6_throughput() -> list:
+    """Updates/worker/time vs worker count (paper: constant = linear
+    scaling; drops when items/worker get sparse)."""
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], pr["k"])
+    out = []
+    base = None
+    for p in (2, 4, 8, 16, 30):
+        cfg = SimConfig(p=p, k=pr["k"], lam=0.01, schedule=_SCHED,
+                        epochs=1.0, seed=0, a=1.0, c=10.0)
+        res, us = timed(lambda: NomadSimulator(
+            cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0).run())
+        base = base or res.throughput
+        out.append((f"fig6/p{p}", us,
+                    f"thpt_per_worker={res.throughput:.4f},"
+                    f"rel={res.throughput / base:.3f}"))
+    return out
+
+
+def fig7_speedup() -> list:
+    """Test RMSE at equal total CPU time across worker counts — curves
+    coincide under linear speedup.  Metric: RMSE after a fixed number of
+    per-worker updates."""
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], pr["k"])
+    out = []
+    for p in (2, 4, 8):
+        cfg = SimConfig(p=p, k=pr["k"], lam=0.01, schedule=_SCHED,
+                        epochs=3.0, seed=0, a=1.0, c=10.0,
+                        record_every=3.0)
+        res, us = timed(lambda: NomadSimulator(
+            cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0,
+            test=pr["test"]).run())
+        rmse = objective.rmse_np(res.W, res.H, *pr["test"])
+        out.append((f"fig7/p{p}", us, f"rmse_at_3epochs={rmse:.4f}"))
+    return out
+
+
+def fig8_distributed(setting: str = "hpc") -> list:
+    """Distributed comparison: NOMAD vs DSGD vs DSGD++ under the paper's
+    cost model.  'hpc' = fast network (c small), 'commodity' = slow
+    network + a straggler (the §5.4 AWS setting)."""
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], pr["k"])
+    p = 8
+    c = 5.0 if setting == "hpc" else 80.0
+    speed = None if setting == "hpc" else \
+        np.array([1.0] * (p - 1) + [0.4])
+    cfg = SimConfig(p=p, k=pr["k"], lam=0.01, schedule=_SCHED, epochs=2.0,
+                    seed=0, a=1.0, c=c, speed=speed, load_balance=True)
+    out = []
+    res_n, us_n = timed(lambda: NomadSimulator(
+        cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0).run())
+    out.append((f"fig8[{setting}]/nomad", us_n,
+                f"virt_thpt={res_n.throughput:.4f},"
+                f"rmse={objective.rmse_np(res_n.W, res_n.H, *pr['test']):.4f}"))
+    for name, overlap in (("dsgd", False), ("dsgd++", True)):
+        res_d, us_d = timed(lambda: simulate_dsgd(
+            cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0,
+            overlap=overlap))
+        out.append((f"fig8[{setting}]/{name}", us_d,
+                    f"virt_thpt={res_d.throughput:.4f},"
+                    f"rmse={objective.rmse_np(res_d.W, res_d.H, *pr['test']):.4f},"
+                    f"nomad_speedup={res_n.throughput / res_d.throughput:.2f}x"))
+    return out
+
+
+def fig10_machine_scaling() -> list:
+    """Fixed dataset, growing machine count: per-worker throughput."""
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], pr["k"])
+    out = []
+    for p in (1, 2, 4, 8, 16, 32):
+        cfg = SimConfig(p=p, k=pr["k"], lam=0.01, schedule=_SCHED,
+                        epochs=1.0, seed=0, a=1.0, c=40.0)
+        res, us = timed(lambda: NomadSimulator(
+            cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0).run())
+        out.append((f"fig10/m{p}", us,
+                    f"thpt_per_worker={res.throughput:.4f}"))
+    return out
+
+
+def fig12_weak_scaling() -> list:
+    """Users (and ratings) grow with worker count (§5.5): NOMAD vs DSGD
+    time-to-epoch ratio."""
+    from repro.data.synthetic import synthetic_ratings
+    out = []
+    for p in (2, 4, 8):
+        m = 300 * p
+        rows, cols, vals, _, _ = synthetic_ratings(
+            m, 120, 12_000 * p, k=8, seed=p, noise=0.05)
+        W0, H0 = objective.init_factors_np(0, m, 120, 8)
+        cfg = SimConfig(p=p, k=8, lam=0.01, schedule=_SCHED, epochs=1.0,
+                        seed=0, a=1.0, c=40.0)
+        res_n, us = timed(lambda: NomadSimulator(
+            cfg, m, 120, rows, cols, vals, W0, H0).run())
+        res_d, _ = timed(lambda: simulate_dsgd(
+            cfg, m, 120, rows, cols, vals, W0, H0))
+        out.append((f"fig12/p{p}", us,
+                    f"nomad_vtime={res_n.sim_time:.0f},"
+                    f"dsgd_vtime={res_d.sim_time:.0f},"
+                    f"advantage={res_d.sim_time / res_n.sim_time:.2f}x"))
+    return out
+
+
+def fig13_lambda() -> list:
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    out = []
+    for lam in (0.001, 0.01, 0.1):
+        (_, _, tr), us = timed(lambda: nomad.fit(
+            rows, cols, vals, pr["m"], pr["n"], pr["k"], p=4, lam=lam,
+            schedule=_SCHED, epochs=6, test=pr["test"]))
+        out.append((f"fig13/lam{lam}", us / 6,
+                    f"final_rmse={tr[-1][1]:.4f}"))
+    return out
+
+
+def fig14_rank() -> list:
+    pr = small_netflix()
+    rows, cols, vals = pr["train"]
+    out = []
+    for k in (4, 8, 16, 32):
+        (_, _, tr), us = timed(lambda: nomad.fit(
+            rows, cols, vals, pr["m"], pr["n"], k, p=4, lam=0.01,
+            schedule=_SCHED, epochs=6, test=pr["test"]))
+        out.append((f"fig14/k{k}", us / 6, f"final_rmse={tr[-1][1]:.4f}"))
+    return out

@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure plus kernel
+micro-benchmarks and the roofline table (from dry-run artifacts when
+present).  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark name prefixes")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    from . import paper_figs, kernel_bench, roofline
+
+    suites = [
+        ("fig5", paper_figs.fig5_single_machine),
+        ("fig6", paper_figs.fig6_throughput),
+        ("fig7", paper_figs.fig7_speedup),
+        ("fig8_hpc", lambda: paper_figs.fig8_distributed("hpc")),
+        ("fig8_commodity",
+         lambda: paper_figs.fig8_distributed("commodity")),
+        ("fig10", paper_figs.fig10_machine_scaling),
+        ("fig12", paper_figs.fig12_weak_scaling),
+        ("fig13", paper_figs.fig13_lambda),
+        ("fig14", paper_figs.fig14_rank),
+        ("kernel", kernel_bench.kernel_rows),
+        ("roofline", roofline.roofline_rows),
+    ]
+
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro — NOMAD (Yun et al., 2013) on TPU.
+
+The paper's nomadic-ownership / owner-computes / comm-overlap discipline,
+implemented three ways (see DESIGN.md):
+  * core/        — the matrix-completion algorithm itself: discrete-event
+                   Algorithm 1 simulator (bitwise-serializable), SPMD ring
+                   engine (shard_map + ppermute), baselines
+  * distributed/ — the pattern generalized: ring collectives, manual
+                   bf16-psum TP, 2D-TP decode matmuls
+  * models/ etc. — a full LM training/serving stack (10 architectures)
+                   whose dry-run/roofline apparatus lives in launch/
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,21 @@
+"""NOMAD core: the paper's contribution.
+
+Public API:
+  fit                      — one-call NOMAD matrix completion
+  NomadRingEngine          — SPMD ring engine (shard_map + ppermute)
+  NomadSimulator           — paper-faithful discrete-event Algorithm 1
+  baselines: dsgd / ccdpp / als / hogwild
+"""
+from .nomad import NomadRingEngine, fit
+from .async_sim import NomadSimulator, SimConfig, SimResult, simulate_dsgd
+from . import objective  # the module; the J(W,H) function is objective.objective
+from .objective import init_factors, init_factors_np, rmse, rmse_np
+from .stepsize import PowerSchedule, BoldDriver
+from . import baselines, partition, serial
+
+__all__ = [
+    "NomadRingEngine", "fit", "NomadSimulator", "SimConfig", "SimResult",
+    "simulate_dsgd", "init_factors", "init_factors_np", "objective", "rmse",
+    "rmse_np", "PowerSchedule", "BoldDriver", "baselines", "partition",
+    "serial",
+]

@@ -1,0 +1,300 @@
+"""Discrete-event simulator of NOMAD's Algorithm 1.
+
+This is the *paper-faithful* implementation: per-worker concurrent queues,
+uniform-random (or §3.3 queue-aware) recipient choice, fully asynchronous
+decentralized execution, owner-computes, lock-free.  Because one CPU core
+cannot demonstrate 30-thread wall-clock scaling, we simulate virtual time
+with the paper's own cost model (§3.2): processing the ratings of one item
+on one worker costs ``a * k`` per rating, shipping an ``(j, h_j)`` pair
+costs ``c * k``.  The numerical updates are executed for real (numpy
+float64), so convergence curves are genuine; only the clock is virtual.
+
+The simulator also supports:
+  * stragglers   — per-worker speed multipliers (§3.3 motivation),
+  * failures     — workers dying at given virtual times; their queued
+                   nomadic items and their row-ownership are re-assigned to
+                   survivors (the NOMAD elasticity story),
+  * DSGD mode    — bulk-synchronous block rotation with barriers, used to
+                   demonstrate the curse of the last reducer (Fig. 8/11),
+  * DSGD++ mode  — 2p partitions with communication overlap [25].
+
+Every SGD update is logged as (start_time, seq, rating_id) segments so the
+executed schedule can be *replayed serially* and compared bitwise — the
+serializability property test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .objective import sgd_pair_update, rmse_np
+from .stepsize import PowerSchedule
+
+
+@dataclasses.dataclass
+class SimConfig:
+    p: int = 4                    # number of workers
+    k: int = 16                   # latent dimension
+    lam: float = 0.05
+    schedule: PowerSchedule = dataclasses.field(default_factory=PowerSchedule)
+    a: float = 1.0                # per-rating processing cost (x k)
+    c: float = 20.0               # per-item communication latency (x k)
+    epochs: float = 4.0           # stop after ~epochs * nnz updates
+    load_balance: bool = False    # §3.3 queue-aware routing
+    speed: Optional[np.ndarray] = None   # per-worker speed multiplier
+    failures: Tuple[Tuple[float, int], ...] = ()  # (time, worker) events
+    seed: int = 0
+    record_every: float = 0.5     # RMSE trace granularity, in epochs
+
+
+@dataclasses.dataclass
+class SimResult:
+    W: np.ndarray
+    H: np.ndarray
+    update_log: List[Tuple[float, int]]   # (start_time, rating_id) in exec order
+    n_updates: int
+    sim_time: float
+    busy_time: np.ndarray                 # per worker
+    trace: List[Tuple[float, int, float]]  # (time, n_updates, test RMSE)
+    throughput: float                     # updates / worker / unit time
+
+
+class NomadSimulator:
+    """Event-driven NOMAD (Algorithm 1) with virtual time."""
+
+    def __init__(self, cfg: SimConfig, m: int, n: int,
+                 rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 W0: np.ndarray, H0: np.ndarray,
+                 test: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None):
+        self.cfg = cfg
+        self.m, self.n = m, n
+        self.rows = np.asarray(rows)
+        self.cols = np.asarray(cols)
+        self.vals = np.asarray(vals, dtype=np.float64)
+        self.W = np.array(W0, dtype=np.float64, copy=True)
+        self.H = np.array(H0, dtype=np.float64, copy=True)
+        self.test = test
+        p = cfg.p
+        rng = np.random.default_rng(cfg.seed)
+        self.rng = rng
+
+        # static row partition (balanced by rating count, footnote 1)
+        from .partition import balanced_assign
+        row_cnt = np.bincount(self.rows, minlength=m)
+        self.row_owner = balanced_assign(row_cnt, p)
+
+        # per (worker, item): list of rating ids, ordered  (\bar\Omega_j^{(q)})
+        self.cell: Dict[Tuple[int, int], np.ndarray] = {}
+        owner_of_rating = self.row_owner[self.rows]
+        order = np.lexsort((self.rows, self.cols, owner_of_rating))
+        key = owner_of_rating[order].astype(np.int64) * n + self.cols[order]
+        bounds = np.flatnonzero(np.diff(key)) + 1
+        for seg in np.split(order, bounds):
+            if len(seg):
+                q = int(owner_of_rating[seg[0]])
+                j = int(self.cols[seg[0]])
+                self.cell[(q, j)] = seg
+
+        # per-pair update counters for the step-size schedule (eq. 11)
+        self.pair_t = np.zeros(len(self.rows), dtype=np.int64)
+        self.speed = (np.ones(p) if cfg.speed is None
+                      else np.asarray(cfg.speed, dtype=np.float64))
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        p = cfg.p
+        rng = self.rng
+        k = self.W.shape[1]
+        nnz = len(self.rows)
+        target_updates = int(cfg.epochs * nnz)
+
+        # initial random assignment of items to queues (Alg. 1 lines 7-10)
+        queues: List[deque] = [deque() for _ in range(p)]
+        for j in range(self.n):
+            queues[int(rng.integers(p))].append(j)
+
+        alive = np.ones(p, dtype=bool)
+        clock = np.zeros(p)            # per-worker virtual clocks
+        busy = np.zeros(p)
+        heap: List[Tuple[float, int, str, int, int]] = []  # (t, seq, kind, j, q)
+        seq = 0
+
+        # prime: every worker starts working on its queue head at t=0
+        # events: ('finish', j, q) worker q finished processing item j
+        #         ('arrive', j, q) item j arrives at worker q's queue
+        def start_next(q: int, t: float):
+            nonlocal seq
+            if not alive[q] or not queues[q]:
+                return
+            j = queues[q].popleft()
+            seg = self.cell.get((q, j))
+            nseg = 0 if seg is None else len(seg)
+            dur = (cfg.a * k * max(nseg, 1)) / self.speed[q]
+            seq += 1
+            heapq.heappush(heap, (t + dur, seq, "finish", j, q))
+            # capture the rating segment AT START: a failure may merge a
+            # dead worker's ratings into this cell mid-flight, and those
+            # must only take effect for segments started after the merge
+            # (otherwise the start-time linearization is violated).
+            self._pending[q] = (j, t, seg)
+
+        self._pending: Dict[int, Tuple[int, float, object]] = {}
+        for q in range(p):
+            start_next(q, 0.0)
+
+        fail_iter = iter(sorted(cfg.failures))
+        next_fail = next(fail_iter, None)
+
+        update_log: List[Tuple[float, int]] = []
+        trace: List[Tuple[float, int, float]] = []
+        n_updates = 0
+        record_at = int(cfg.record_every * nnz)
+        sim_time = 0.0
+
+        while heap and n_updates < target_updates:
+            t, _, kind, j, q = heapq.heappop(heap)
+            sim_time = t
+
+            # failure injection
+            while next_fail is not None and next_fail[0] <= t:
+                ft, fq = next_fail
+                if alive[fq] and alive.sum() > 1:
+                    alive[fq] = False
+                    survivors = np.flatnonzero(alive)
+                    # re-enqueue this worker's nomadic items to survivors
+                    for item in queues[fq]:
+                        tgt = int(rng.choice(survivors))
+                        seq += 1
+                        heapq.heappush(heap, (ft + cfg.c * k, seq, "arrive",
+                                              item, tgt))
+                    queues[fq].clear()
+                    if fq in self._pending:   # in-flight item is lost & resent
+                        item, _, _ = self._pending.pop(fq)
+                        tgt = int(rng.choice(survivors))
+                        seq += 1
+                        heapq.heappush(heap, (ft + cfg.c * k, seq, "arrive",
+                                              item, tgt))
+                    # row ownership moves to a survivor (elastic re-shard)
+                    heir = int(survivors[0])
+                    moved = np.flatnonzero(self.row_owner == fq)
+                    self.row_owner[moved] = heir
+                    for key in [key for key in self.cell if key[0] == fq]:
+                        seg = self.cell.pop(key)
+                        dst = (heir, key[1])
+                        self.cell[dst] = (np.concatenate([self.cell[dst], seg])
+                                          if dst in self.cell else seg)
+                next_fail = next(fail_iter, None)
+
+            if not alive[q]:
+                continue
+
+            if kind == "arrive":
+                was_idle = q not in self._pending
+                queues[q].append(j)
+                if was_idle:
+                    start_next(q, max(t, clock[q]))
+            else:  # finish
+                if q not in self._pending or self._pending[q][0] != j:
+                    continue  # stale event (e.g. re-routed at failure)
+                _, t_start, seg = self._pending.pop(q)
+                if seg is not None:
+                    # owner-computes: sequential SGD on \bar\Omega_j^{(q)}
+                    lam = cfg.lam
+                    for g in seg:
+                        i = int(self.rows[g])
+                        lr = cfg.schedule(self.pair_t[g])
+                        self.pair_t[g] += 1
+                        self.W[i], self.H[j] = sgd_pair_update(
+                            self.W[i], self.H[j], self.vals[g], lr, lam)
+                        update_log.append((t_start, g))
+                        n_updates += 1
+                busy[q] += t - t_start
+                clock[q] = t
+                # route the nomadic pair (Alg.1 line 22, or §3.3 balanced)
+                live = np.flatnonzero(alive)
+                if cfg.load_balance:
+                    qlen = np.array([len(queues[x]) + (x in self._pending)
+                                     for x in live], dtype=np.float64)
+                    w = 1.0 / (1.0 + qlen) ** 2
+                    dest = int(rng.choice(live, p=w / w.sum()))
+                else:
+                    dest = int(rng.choice(live))
+                seq += 1
+                heapq.heappush(heap, (t + cfg.c * k, seq, "arrive", j, dest))
+                start_next(q, t)
+
+                if self.test is not None and n_updates >= record_at:
+                    record_at += int(cfg.record_every * nnz)
+                    trace.append((t, n_updates,
+                                  rmse_np(self.W, self.H, *self.test)))
+
+        total_time = max(sim_time, 1e-12)
+        thpt = n_updates / (total_time * max(1, int(alive.sum())))
+        return SimResult(W=self.W, H=self.H, update_log=update_log,
+                         n_updates=n_updates, sim_time=sim_time,
+                         busy_time=busy, trace=trace, throughput=thpt)
+
+
+# ---------------------------------------------------------------------- #
+# Bulk-synchronous DSGD / DSGD++ simulators (baselines for Fig. 8/11/12). #
+# ---------------------------------------------------------------------- #
+
+def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
+                  W0, H0, test=None, overlap: bool = False) -> SimResult:
+    """DSGD [12]: p x p blocks, bulk synchronization between sub-epochs.
+    ``overlap=True`` gives DSGD++ [25]: communication of the *next* block
+    overlaps with compute, but the barrier (last-reducer wait) remains.
+    """
+    from .partition import pack
+    p, k = cfg.p, cfg.k
+    rows = np.asarray(rows); cols = np.asarray(cols)
+    vals = np.asarray(vals, dtype=np.float64)
+    br = pack(rows, cols, vals, m, n, p, balanced=True)
+    W = np.array(W0, np.float64, copy=True)
+    H = np.array(H0, np.float64, copy=True)
+    speed = np.ones(p) if cfg.speed is None else np.asarray(cfg.speed)
+    rng = np.random.default_rng(cfg.seed)
+
+    nnz = len(rows)
+    pair_t = np.zeros(nnz, dtype=np.int64)
+    t_sim = 0.0
+    n_updates = 0
+    busy = np.zeros(p)
+    trace: List[Tuple[float, int, float]] = []
+    update_log: List[Tuple[float, int]] = []
+    target = int(cfg.epochs * nnz)
+
+    while n_updates < target:
+        for s in range(p):          # one sub-epoch = one diagonal of blocks
+            durs = np.zeros(p)
+            for q in range(p):
+                ids = br.gid[q, s, : br.nnz_cell[q, s]]
+                for g in ids:
+                    i, j = int(rows[g]), int(cols[g])
+                    lr = cfg.schedule(pair_t[g]); pair_t[g] += 1
+                    W[i], H[j] = sgd_pair_update(W[i], H[j], vals[g], lr,
+                                                 cfg.lam)
+                    update_log.append((t_sim, g))
+                durs[q] = cfg.a * k * max(len(ids), 1) / speed[q]
+                n_updates += len(ids)
+            busy += durs
+            # each worker ships one whole block (n/p item vectors) per
+            # sub-epoch; DSGD++ overlaps that transfer with compute
+            comm = cfg.c * k * br.n_local
+            step_time = (max(durs.max(), comm) if overlap
+                         else durs.max() + comm)
+            t_sim += step_time   # barrier: everyone waits for the slowest
+            if test is not None:
+                trace.append((t_sim, n_updates, rmse_np(W, H, *test)))
+            if n_updates >= target:
+                break
+
+    thpt = n_updates / (max(t_sim, 1e-12) * p)
+    return SimResult(W=W, H=H, update_log=update_log, n_updates=n_updates,
+                     sim_time=t_sim, busy_time=busy, trace=trace,
+                     throughput=thpt)

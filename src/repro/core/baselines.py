@@ -1,0 +1,203 @@
+"""Baseline matrix-completion optimizers the paper compares against.
+
+* DSGD      [Gemulla et al., 2011]  — bulk-synchronous p x p block rotation
+* CCD++     [Yu et al., 2012]       — feature-wise coordinate descent with
+                                      residual maintenance
+* ALS       [Zhou et al., 2008]     — exact alternating least squares
+* Hogwild   [Recht et al., 2011]    — lock-free minibatch SGD with racing
+                                      (sum-combined) updates; NON-serializable,
+                                      the contrast class for NOMAD
+
+All take COO ratings and return (W, H).  They are JAX implementations
+(single program; DSGD's worker loop is a vmap over provably-disjoint
+blocks, which is exactly what its bulk-synchronous semantics permit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import partition as part
+from .objective import init_factors, rmse
+from .stepsize import PowerSchedule
+from ..kernels import ops as kops
+
+
+# --------------------------------------------------------------------- #
+# DSGD                                                                   #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _dsgd_subepoch(Ws, Hs, rows, cols, vals, mask, lr, lam, impl="xla"):
+    """One DSGD sub-epoch: every worker updates its current diagonal block
+    in parallel (disjoint rows x disjoint cols => vmap is exact), then a
+    bulk synchronization rotates the H blocks."""
+    Ws, Hs = jax.vmap(
+        lambda W, H, r, c, v, m: kops.block_sgd(W, H, r, c, v, m, lr, lam,
+                                                impl=impl)
+    )(Ws, Hs, rows, cols, vals, mask)
+    return Ws, jnp.roll(Hs, 1, axis=0)
+
+
+def dsgd(rows, cols, vals, m, n, k, p, *, lam=0.05, epochs=10,
+         schedule: Optional[PowerSchedule] = None, seed=0, test=None,
+         W0=None, H0=None):
+    """Bulk-synchronous DSGD.  Identical update math to NOMAD's ring — the
+    difference (bulk barrier vs. asynchronous circulation) only manifests
+    in wall-clock behaviour, which the discrete-event simulator measures."""
+    schedule = schedule or PowerSchedule()
+    br = part.pack(rows, cols, vals, m, n, p, balanced=True)
+    if W0 is None:
+        W0, H0 = init_factors(jax.random.key(seed), m, n, k)
+    Ws, Hs = part.shard_factors(np.asarray(W0), np.asarray(H0), br)
+    Ws, Hs = jnp.asarray(Ws), jnp.asarray(Hs)
+    R, C, V, M = (jnp.asarray(x) for x in (br.rows, br.cols, br.vals, br.mask))
+    trace = []
+    for e in range(epochs):
+        lr = jnp.asarray(schedule(e), Ws.dtype)
+        for s in range(p):
+            Ws, Hs = _dsgd_subepoch(Ws, Hs, R[:, s], C[:, s], V[:, s],
+                                    M[:, s], lr, lam)
+        if test is not None:
+            W, H = part.unshard_factors(np.asarray(Ws), np.asarray(Hs), br)
+            trace.append((e + 1, float(rmse(jnp.asarray(W), jnp.asarray(H),
+                                            *map(jnp.asarray, test)))))
+    W, H = part.unshard_factors(np.asarray(Ws), np.asarray(Hs), br)
+    return W, H, trace
+
+
+# --------------------------------------------------------------------- #
+# CCD++                                                                  #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("inner",))
+def _ccd_feature_pass(wl, hl, res_plus, rows, cols, lam_r, lam_c, inner=3):
+    """Given residual-plus matrix entries ``res_plus = R_ij + w_il h_jl``,
+    alternately solve the rank-1 fit  min sum (res_plus - w h)^2 + reg."""
+    def one(carry, _):
+        wl, hl = carry
+        # update w: w_i = sum_j res+ * h_j / (lam_r_i + sum h_j^2)
+        num_w = jax.ops.segment_sum(res_plus * hl[cols], rows,
+                                    num_segments=wl.shape[0])
+        den_w = jax.ops.segment_sum(hl[cols] ** 2, rows,
+                                    num_segments=wl.shape[0])
+        wl = num_w / (den_w + lam_r)
+        num_h = jax.ops.segment_sum(res_plus * wl[rows], cols,
+                                    num_segments=hl.shape[0])
+        den_h = jax.ops.segment_sum(wl[rows] ** 2, cols,
+                                    num_segments=hl.shape[0])
+        hl = num_h / (den_h + lam_c)
+        return (wl, hl), ()
+    (wl, hl), _ = jax.lax.scan(one, (wl, hl), None, length=inner)
+    return wl, hl
+
+
+def ccdpp(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, inner=3,
+          seed=0, test=None, W0=None, H0=None):
+    """CCD++ with residual maintenance (feature-wise alternating CD)."""
+    rows = jnp.asarray(rows); cols = jnp.asarray(cols)
+    vals = jnp.asarray(vals, jnp.float32)
+    if W0 is None:
+        W0, H0 = init_factors(jax.random.key(seed), m, n, k)
+    W = jnp.asarray(W0); H = jnp.asarray(H0)
+    # weighted regularization (eq. 1): lam * |Omega_i| per row
+    lam_r = lam * jax.ops.segment_sum(jnp.ones_like(vals), rows,
+                                      num_segments=m)
+    lam_c = lam * jax.ops.segment_sum(jnp.ones_like(vals), cols,
+                                      num_segments=n)
+    res = vals - jnp.sum(W[rows] * H[cols], axis=-1)
+    trace = []
+    for e in range(epochs):
+        for l in range(k):
+            wl, hl = W[:, l], H[:, l]
+            res_plus = res + wl[rows] * hl[cols]
+            wl, hl = _ccd_feature_pass(wl, hl, res_plus, rows, cols,
+                                       lam_r, lam_c, inner=inner)
+            res = res_plus - wl[rows] * hl[cols]
+            W = W.at[:, l].set(wl)
+            H = H.at[:, l].set(hl)
+        if test is not None:
+            trace.append((e + 1, float(rmse(W, H, *map(jnp.asarray, test)))))
+    return np.asarray(W), np.asarray(H), trace
+
+
+# --------------------------------------------------------------------- #
+# ALS                                                                    #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _als_solve_side(H, rows, cols, vals, lam, m):
+    """w_i <- (H_{O_i}^T H_{O_i} + lam |O_i| I)^{-1} H^T a_i, batched via
+    segment sums of h h^T outer products."""
+    k = H.shape[1]
+    hj = H[cols]
+    outer = hj[:, :, None] * hj[:, None, :]                  # (nnz, k, k)
+    M = jax.ops.segment_sum(outer, rows, num_segments=m)     # (m, k, k)
+    b = jax.ops.segment_sum(hj * vals[:, None], rows, num_segments=m)
+    cnt = jax.ops.segment_sum(jnp.ones_like(vals), rows, num_segments=m)
+    M = M + (lam * cnt[:, None, None] + 1e-8) * jnp.eye(k)[None]
+    return jnp.linalg.solve(M, b[:, :, None])[..., 0]
+
+
+def als(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, seed=0,
+        test=None, W0=None, H0=None):
+    rows = jnp.asarray(rows); cols = jnp.asarray(cols)
+    vals = jnp.asarray(vals, jnp.float32)
+    if W0 is None:
+        W0, H0 = init_factors(jax.random.key(seed), m, n, k)
+    W = jnp.asarray(W0); H = jnp.asarray(H0)
+    trace = []
+    for e in range(epochs):
+        W = _als_solve_side(H, rows, cols, vals, lam, m)
+        H = _als_solve_side(W, cols, rows, vals, lam, n)
+        if test is not None:
+            trace.append((e + 1, float(rmse(W, H, *map(jnp.asarray, test)))))
+    return np.asarray(W), np.asarray(H), trace
+
+
+# --------------------------------------------------------------------- #
+# Hogwild-style ASGD                                                     #
+# --------------------------------------------------------------------- #
+
+@jax.jit
+def _hogwild_minibatch(W, H, rows, cols, vals, lr, lam):
+    """A 'parallel' minibatch where conflicting updates race; scatter-add
+    models the sum-combination of racy lock-free writes.  Deliberately
+    non-serializable — the contrast class of §4.2/§4.3."""
+    wi = W[rows]; hj = H[cols]
+    err = vals - jnp.sum(wi * hj, axis=-1)
+    gw = -err[:, None] * hj + lam * wi
+    gh = -err[:, None] * wi + lam * hj
+    W = W.at[rows].add(-lr * gw)
+    H = H.at[cols].add(-lr * gh)
+    return W, H
+
+
+def hogwild(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, batch=256,
+            schedule: Optional[PowerSchedule] = None, seed=0, test=None,
+            W0=None, H0=None):
+    schedule = schedule or PowerSchedule()
+    rows_n = np.asarray(rows); cols_n = np.asarray(cols)
+    vals_n = np.asarray(vals, np.float32)
+    if W0 is None:
+        W0, H0 = init_factors(jax.random.key(seed), m, n, k)
+    W = jnp.asarray(W0); H = jnp.asarray(H0)
+    rng = np.random.default_rng(seed)
+    nnz = len(rows_n)
+    nb = max(1, nnz // batch)
+    trace = []
+    for e in range(epochs):
+        lr = jnp.asarray(schedule(e), W.dtype)
+        perm = rng.permutation(nnz)
+        for b in range(nb):
+            ids = perm[b * batch:(b + 1) * batch]
+            W, H = _hogwild_minibatch(W, H, jnp.asarray(rows_n[ids]),
+                                      jnp.asarray(cols_n[ids]),
+                                      jnp.asarray(vals_n[ids]), lr, lam)
+        if test is not None:
+            trace.append((e + 1, float(rmse(W, H, *map(jnp.asarray, test)))))
+    return np.asarray(W), np.asarray(H), trace

@@ -1,0 +1,79 @@
+"""Matrix-completion objective, per-rating SGD updates, metrics.
+
+Implements eq. (1) of the paper in its simplified per-rating form
+
+    J(W,H) = 1/2 sum_{(i,j) in Omega} [ (A_ij - <w_i,h_j>)^2
+                                        + lam (||w_i||^2 + ||h_j||^2) ]
+
+and the SGD updates (9)/(10).  Note eq. (10) of the paper contains a typo
+(``w_{j_t}``); both updates use the *old* values of ``w_i`` and ``h_j``,
+which is what every published implementation (including the authors') does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_factors(key: jax.Array, m: int, n: int, k: int,
+                 dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """W, H ~ UniformReal(0, 1/sqrt(k)) as in Algorithm 1, lines 4-5."""
+    kw, kh = jax.random.split(key)
+    scale = 1.0 / np.sqrt(k)
+    W = jax.random.uniform(kw, (m, k), dtype=dtype, maxval=scale)
+    H = jax.random.uniform(kh, (n, k), dtype=dtype, maxval=scale)
+    return W, H
+
+
+def init_factors_np(seed: int, m: int, n: int, k: int,
+                    dtype=np.float64) -> Tuple[np.ndarray, np.ndarray]:
+    """NumPy twin of :func:`init_factors` for the discrete-event simulator."""
+    rng = np.random.default_rng(seed)
+    scale = 1.0 / np.sqrt(k)
+    W = rng.uniform(0.0, scale, size=(m, k)).astype(dtype)
+    H = rng.uniform(0.0, scale, size=(n, k)).astype(dtype)
+    return W, H
+
+
+def sgd_pair_update(w, h, a, lr, lam):
+    """One SGD update on a single rating (eqs. 9-10). Returns (w', h').
+
+    Works for both numpy and jax arrays; uses old values for both grads.
+    """
+    err = a - w @ h
+    w_new = w - lr * (-err * h + lam * w)
+    h_new = h - lr * (-err * w + lam * h)
+    return w_new, h_new
+
+
+@functools.partial(jax.jit, static_argnames=())
+def objective(W, H, rows, cols, vals, lam):
+    """J(W, H) over the given COO ratings (simplified per-rating form)."""
+    wi = W[rows]
+    hj = H[cols]
+    err = vals - jnp.sum(wi * hj, axis=-1)
+    reg = jnp.sum(wi * wi, axis=-1) + jnp.sum(hj * hj, axis=-1)
+    return 0.5 * jnp.sum(err * err + lam * reg)
+
+
+@jax.jit
+def rmse(W, H, rows, cols, vals):
+    pred = jnp.sum(W[rows] * H[cols], axis=-1)
+    return jnp.sqrt(jnp.mean((vals - pred) ** 2))
+
+
+def rmse_np(W, H, rows, cols, vals):
+    pred = np.sum(W[rows] * H[cols], axis=-1)
+    return float(np.sqrt(np.mean((vals - pred) ** 2)))
+
+
+def objective_np(W, H, rows, cols, vals, lam):
+    wi = W[rows]
+    hj = H[cols]
+    err = vals - np.sum(wi * hj, axis=-1)
+    reg = np.sum(wi * wi, axis=-1) + np.sum(hj * hj, axis=-1)
+    return float(0.5 * np.sum(err * err + lam * reg))

@@ -1,0 +1,205 @@
+"""Partitioning and block packing for NOMAD.
+
+The paper splits users into ``p`` disjoint sets (footnote 1 recommends
+balancing by number of ratings, which we implement) and treats item columns
+as nomadic.  For the SPMD ring engine we pre-pack the ratings into a
+``p x p`` grid of cells — cell ``(q, b)`` holds the ratings with row-owner
+``q`` and item-block ``b`` — padded to a common ``max_nnz`` so a
+``lax.scan`` over ring steps can index them.  Fine-grained nnz-balanced
+construction of the *item blocks* is the static SPMD equivalent of the
+paper's dynamic queue-length load balancing (§3.3): every (worker, block)
+cell carries approximately equal work.
+
+Within a cell, ratings are sorted by item column (then by row), matching
+Algorithm 1 which processes, for each owned item ``j``, all local ratings
+in ``\\bar\\Omega_j^{(q)}`` consecutively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+def balanced_assign(weights: np.ndarray, p: int) -> np.ndarray:
+    """Greedy longest-processing-time assignment of items to ``p`` bins.
+
+    Returns ``assign`` with ``assign[i]`` = bin of item ``i``.  Items with
+    larger ``weights`` are placed first into the currently lightest bin,
+    giving a 4/3-approximate makespan — ample for load balancing.
+    """
+    order = np.argsort(-weights, kind="stable")
+    load = np.zeros(p, dtype=np.int64)
+    assign = np.zeros(len(weights), dtype=np.int32)
+    for i in order:
+        b = int(np.argmin(load))
+        assign[i] = b
+        load[b] += int(weights[i]) + 1  # +1 so zero-degree items spread too
+    return assign
+
+
+def contiguous_assign(count: int, p: int) -> np.ndarray:
+    """Round-robin-free contiguous split (used when determinism across
+    engines matters more than balance)."""
+    sizes = np.full(p, count // p, dtype=np.int64)
+    sizes[: count % p] += 1
+    return np.repeat(np.arange(p, dtype=np.int32), sizes)
+
+
+@dataclasses.dataclass
+class BlockedRatings:
+    """Ratings packed for the ring engine.  All arrays are numpy.
+
+    Ring convention: H block ``b`` starts on worker ``b`` and moves to
+    worker ``b+1 (mod p)`` after every ring step, so at step ``s`` worker
+    ``q`` owns block ``(q - s) mod p``.  ``rows/cols/vals/mask[q, s]`` hold
+    cell ``(q, (q - s) mod p)``, i.e. they are already laid out in
+    ring-step order.
+    """
+    p: int
+    m: int
+    n: int
+    m_local: int              # padded rows per worker shard
+    n_local: int              # padded cols per item block
+    max_nnz: int              # padded ratings per cell
+    row_owner: np.ndarray     # (m,) -> worker
+    row_local: np.ndarray     # (m,) -> local row index
+    col_block: np.ndarray     # (n,) -> item block
+    col_local: np.ndarray     # (n,) -> local col index
+    row_of: np.ndarray        # (p, m_local) -> global row (or -1 pad)
+    col_of: np.ndarray        # (p, n_local) -> global col (or -1 pad)
+    rows: np.ndarray          # (p, p, max_nnz) int32, local row idx
+    cols: np.ndarray          # (p, p, max_nnz) int32, local col idx
+    vals: np.ndarray          # (p, p, max_nnz) float32
+    mask: np.ndarray          # (p, p, max_nnz) bool
+    nnz_cell: np.ndarray      # (p, p) ints, [q, s] = real nnz of cell
+
+    def block_at(self, q: int, step: int) -> int:
+        return (q - step) % self.p
+
+    def ring_order(self) -> np.ndarray:
+        """Serial-equivalent update ordering of one epoch.
+
+        Returns an int64 array of *global rating ids* (indices into the
+        original COO arrays used at pack time) in an order that is an exact
+        linearization of the ring execution: for each ring step, the per-cell
+        sequences of all workers are concatenated (any interleaving is
+        equivalent — cells within a step touch disjoint rows and columns).
+        """
+        return np.concatenate(
+            [self.gid[q, s, : self.nnz_cell[q, s]]
+             for s in range(self.p) for q in range(self.p)]
+        )
+
+    # filled by pack(); (p, p, max_nnz) global rating ids, -1 pad
+    gid: np.ndarray = None
+
+
+def pack(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    m: int,
+    n: int,
+    p: int,
+    balanced: bool = True,
+) -> BlockedRatings:
+    """Pack COO ratings into the ring-ordered block structure."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals_f = np.asarray(vals, dtype=np.float32)
+    nnz = len(rows)
+
+    row_cnt = np.bincount(rows, minlength=m)
+    col_cnt = np.bincount(cols, minlength=n)
+    if balanced:
+        row_owner = balanced_assign(row_cnt, p)
+        col_block = balanced_assign(col_cnt, p)
+    else:
+        row_owner = contiguous_assign(m, p)
+        col_block = contiguous_assign(n, p)
+
+    # local indices + inverse maps
+    m_local = int(np.max(np.bincount(row_owner, minlength=p)))
+    n_local = int(np.max(np.bincount(col_block, minlength=p)))
+    row_local = np.zeros(m, dtype=np.int64)
+    col_local = np.zeros(n, dtype=np.int64)
+    row_of = np.full((p, m_local), -1, dtype=np.int64)
+    col_of = np.full((p, n_local), -1, dtype=np.int64)
+    for q in range(p):
+        rws = np.flatnonzero(row_owner == q)
+        row_local[rws] = np.arange(len(rws))
+        row_of[q, : len(rws)] = rws
+        cls = np.flatnonzero(col_block == q)
+        col_local[cls] = np.arange(len(cls))
+        col_of[q, : len(cls)] = cls
+
+    # assign each rating to its cell; sort within cell by (col, row)
+    cell_q = row_owner[rows]
+    cell_b = col_block[cols]
+    cell_id = cell_q.astype(np.int64) * p + cell_b
+    order = np.lexsort((rows, cols, cell_id))
+    cell_sorted = cell_id[order]
+    counts = np.bincount(cell_sorted, minlength=p * p).reshape(p, p)
+    max_nnz = max(1, int(counts.max()))
+
+    R = np.zeros((p, p, max_nnz), dtype=np.int32)
+    C = np.zeros((p, p, max_nnz), dtype=np.int32)
+    V = np.zeros((p, p, max_nnz), dtype=np.float32)
+    M = np.zeros((p, p, max_nnz), dtype=bool)
+    G = np.full((p, p, max_nnz), -1, dtype=np.int64)
+    nnz_cell = np.zeros((p, p), dtype=np.int64)
+
+    starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
+    for q in range(p):
+        for b in range(p):
+            lo, hi = starts[q * p + b], starts[q * p + b + 1]
+            ids = order[lo:hi]
+            s = (q - b) % p  # ring step at which worker q owns block b
+            cnt = hi - lo
+            R[q, s, :cnt] = row_local[rows[ids]]
+            C[q, s, :cnt] = col_local[cols[ids]]
+            V[q, s, :cnt] = vals_f[ids]
+            M[q, s, :cnt] = True
+            G[q, s, :cnt] = ids
+            nnz_cell[q, s] = cnt
+
+    br = BlockedRatings(
+        p=p, m=m, n=n, m_local=m_local, n_local=n_local, max_nnz=max_nnz,
+        row_owner=row_owner, row_local=row_local,
+        col_block=col_block, col_local=col_local,
+        row_of=row_of, col_of=col_of,
+        rows=R, cols=C, vals=V, mask=M, nnz_cell=nnz_cell,
+    )
+    br.gid = G
+    return br
+
+
+def shard_factors(W: np.ndarray, H: np.ndarray, br: BlockedRatings
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Scatter global (m,k)/(n,k) factors into (p, m_local, k)/(p, n_local, k)
+    shard layouts (zero padding rows)."""
+    k = W.shape[1]
+    Ws = np.zeros((br.p, br.m_local, k), dtype=W.dtype)
+    Hs = np.zeros((br.p, br.n_local, k), dtype=H.dtype)
+    for q in range(br.p):
+        valid = br.row_of[q] >= 0
+        Ws[q, : valid.sum()] = W[br.row_of[q][valid]]
+        validc = br.col_of[q] >= 0
+        Hs[q, : validc.sum()] = H[br.col_of[q][validc]]
+    return Ws, Hs
+
+
+def unshard_factors(Ws: np.ndarray, Hs: np.ndarray, br: BlockedRatings
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`shard_factors`."""
+    k = Ws.shape[-1]
+    W = np.zeros((br.m, k), dtype=Ws.dtype)
+    H = np.zeros((br.n, k), dtype=Hs.dtype)
+    for q in range(br.p):
+        valid = br.row_of[q] >= 0
+        W[br.row_of[q][valid]] = Ws[q, : valid.sum()]
+        validc = br.col_of[q] >= 0
+        H[br.col_of[q][validc]] = Hs[q, : validc.sum()]
+    return W, H

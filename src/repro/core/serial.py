@@ -1,0 +1,69 @@
+"""Serial SGD reference — the serializability oracle.
+
+NOMAD's headline property is that its asynchronous execution is equivalent
+to *some* serial ordering of SGD updates.  This module replays a given
+ordering serially, in numpy float64 (bitwise-comparable against the
+discrete-event simulator) and in JAX float32 (bitwise-comparable against
+the SPMD ring engine, which performs the same ops in the same per-variable
+order).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .objective import sgd_pair_update
+
+
+def replay_np(W, H, rows, cols, vals, order, lr, lam):
+    """Apply SGD updates serially (in-place on copies) in ``order``.
+
+    ``lr`` may be a scalar or an array aligned with ``order``.
+    """
+    W = W.copy()
+    H = H.copy()
+    lr_arr = np.broadcast_to(np.asarray(lr, dtype=W.dtype), (len(order),))
+    for t, g in enumerate(order):
+        i, j, a = int(rows[g]), int(cols[g]), W.dtype.type(vals[g])
+        W[i], H[j] = sgd_pair_update(W[i], H[j], a, lr_arr[t], lam)
+    return W, H
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _replay_scan(W, H, upd_rows, upd_cols, upd_vals, lrs, lam):
+    def body(carry, upd):
+        W, H = carry
+        i, j, a, lr = upd
+        w, h = sgd_pair_update(W[i], H[j], a, lr, lam)
+        return (W.at[i].set(w), H.at[j].set(h)), ()
+
+    (W, H), _ = jax.lax.scan(
+        body, (W, H), (upd_rows, upd_cols, upd_vals, lrs))
+    return W, H
+
+
+def replay_jax(W, H, rows, cols, vals, order, lr, lam):
+    """JAX twin of :func:`replay_np` (lax.scan over the update sequence)."""
+    order = np.asarray(order)
+    lrs = jnp.broadcast_to(jnp.asarray(lr, dtype=W.dtype), (len(order),))
+    return _replay_scan(
+        jnp.asarray(W), jnp.asarray(H),
+        jnp.asarray(np.asarray(rows)[order], dtype=jnp.int32),
+        jnp.asarray(np.asarray(cols)[order], dtype=jnp.int32),
+        jnp.asarray(np.asarray(vals)[order], dtype=W.dtype),
+        lrs, jnp.asarray(lam, dtype=W.dtype))
+
+
+def run_epochs_np(W, H, rows, cols, vals, schedule, lam, epochs, seed=0,
+                  shuffle=True):
+    """Plain serial SGD training loop: per-epoch random permutation of the
+    ratings, step size keyed on the per-pair update count (= epoch)."""
+    rng = np.random.default_rng(seed)
+    nnz = len(rows)
+    for e in range(epochs):
+        order = rng.permutation(nnz) if shuffle else np.arange(nnz)
+        W, H = replay_np(W, H, rows, cols, vals, order, schedule(e), lam)
+    return W, H

@@ -1,0 +1,100 @@
+"""LM token data pipeline: deterministic, sharded, resumable.
+
+A real cluster reads tokenized shards from blob storage; here the source
+is a seeded synthetic token stream (documents of random length with a
+Zipfian unigram distribution), but the *pipeline machinery* is the real
+thing: per-host sharding by data-parallel rank, sequence packing into
+fixed (B, S) batches, label shifting, deterministic resume from a step
+counter (the checkpoint stores only ``step`` — the pipeline state is a
+pure function of it, which is what makes restart-after-failure exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    n_shards: int = 1          # data-parallel groups reading disjoint data
+    shard_id: int = 0
+    seed: int = 0
+    embed_input: bool = True   # False: emit stub embeddings (audio/vlm)
+    d_model: int = 0
+    mean_doc_len: int = 512
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_shards == 0
+        return self.global_batch // self.n_shards
+
+    def _doc(self, rng):
+        ln = max(8, int(rng.exponential(self.mean_doc_len)))
+        # Zipfian unigrams + EOS
+        toks = rng.zipf(1.3, size=ln) % (self.vocab_size - 1) + 1
+        return np.concatenate([toks, [0]])  # 0 = EOS
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for a given step (resume = recompute)."""
+        rng = np.random.default_rng(
+            (self.seed, self.shard_id, step, 0xD0C5))
+        need = self.local_batch * (self.seq_len + 1)
+        stream = []
+        tot = 0
+        while tot < need:
+            d = self._doc(rng)
+            stream.append(d)
+            tot += len(d)
+        flat = np.concatenate(stream)[:need].astype(np.int32)
+        arr = flat.reshape(self.local_batch, self.seq_len + 1)
+        tokens, labels = arr[:, :-1], arr[:, 1:]
+        out = {"labels": labels}
+        if self.embed_input:
+            out["inputs"] = tokens
+        else:
+            # modality stub: deterministic pseudo-embeddings per token id
+            emb_rng = np.random.default_rng((self.seed, 0xE4B))
+            table = emb_rng.standard_normal(
+                (self.vocab_size, self.d_model)).astype(np.float32)
+            out["inputs"] = table[tokens]
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def lm_input_specs(cfg, shape: dict, *, batch_override: Optional[int] = None):
+    """ShapeDtypeStruct stand-ins for every model input of a given
+    (arch x shape) cell — the dry-run contract (no allocation)."""
+    S = shape["seq_len"]
+    B = batch_override or shape["global_batch"]
+    kind = shape["kind"]
+    if kind == "train" or kind == "prefill":
+        if cfg.embed_input:
+            inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+        out = {"inputs": inputs}
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.rope_kind == "mrope":
+            out["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+        return out
+    # decode: one new token against an S-long cache
+    if cfg.embed_input:
+        inputs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+    return {"inputs": inputs}

@@ -1,0 +1,4 @@
+from .sharding import ShardingCtx, param_specs, make_ctx
+from . import ring
+
+__all__ = ["ShardingCtx", "param_specs", "make_ctx", "ring"]

@@ -1,0 +1,121 @@
+"""Sharding rules: mesh context + path-based parameter PartitionSpecs.
+
+Parallelism layout (see DESIGN.md §5):
+  * dp axes  — ('pod', 'data') multi-pod, ('data',) single-pod: batch /
+    FSDP axis.  Parameters are FSDP-sharded along a non-TP dimension over
+    dp; GSPMD inserts the per-layer all-gathers (ZeRO-3) inside the layer
+    scan so only one layer's weights are ever live.
+  * tp axis  — 'model': Megatron column/row parallel for attention QKV/O,
+    MLP in/out, vocab-parallel embedding & LM head; expert-parallel for
+    MoE; d_inner-parallel for Mamba.
+
+These rules are *path based*: they pattern-match parameter pytree paths so
+the same function covers every architecture family.  Stacked (scanned)
+block parameters get their leading n_periods dim unsharded automatically
+(detected by ndim mismatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    dp: Union[str, Tuple[str, ...]]   # data/FSDP axes
+    tp: str                           # tensor/expert axis
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, *spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def dp_size(self) -> int:
+        axes = self.dp if isinstance(self.dp, tuple) else (self.dp,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp])
+
+
+def make_ctx(mesh: Mesh) -> ShardingCtx:
+    names = mesh.axis_names
+    if "pod" in names:
+        return ShardingCtx(mesh=mesh, dp=("pod", "data"), tp="model")
+    return ShardingCtx(mesh=mesh, dp="data", tp="model")
+
+
+# (regex on joined path, base spec for the *unstacked* param)
+# dp = FSDP axes placeholder, tp = model axis placeholder.
+_RULES = [
+    (r"embed/table$",        ("tp", "dp")),
+    (r"lm_head/w$",          ("dp", "tp")),
+    (r"(wq|wk|wv)/w$",       ("dp", "tp")),
+    (r"(wq|wk|wv)/b$",       ("tp",)),
+    (r"wo/w$",               ("tp", "dp")),
+    (r"wo/b$",               (None,)),
+    (r"(gate|up)/w$",        ("dp", "tp")),
+    (r"down/w$",             ("tp", "dp")),
+    (r"(gate|up|down)/b$",   (None,)),
+    (r"router/w$",           (None, None)),
+    (r"moe/gate$",           ("tp", "dp", None)),   # experts (E, d, ff)
+    (r"moe/up$",             ("tp", "dp", None)),
+    (r"moe/down$",           ("tp", None, "dp")),
+    (r"in_proj/w$",          ("dp", "tp")),
+    (r"conv_w$",             (None, "tp")),
+    (r"conv_b$",             ("tp",)),
+    (r"x_proj/w$",           ("tp", None)),
+    (r"dt_proj/w$",          (None, "tp")),
+    (r"dt_bias$",            ("tp",)),
+    (r"A_log$",              ("tp", None)),
+    (r"D$",                  ("tp",)),
+    (r"out_proj/w$",         ("tp", "dp")),
+    (r"scale$",              (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, ndim: int, ctx: ShardingCtx) -> P:
+    for pat, base in _RULES:
+        if re.search(pat, path_str):
+            spec = [ctx.dp if s == "dp" else ctx.tp if s == "tp" else None
+                    for s in base]
+            # stacked/scanned params have extra leading dims — unsharded
+            while len(spec) < ndim:
+                spec.insert(0, None)
+            assert len(spec) == ndim, (path_str, spec, ndim)
+            return P(*spec)
+    return P(*([None] * ndim))  # default: replicate
+
+
+def param_specs(params_shape, ctx: ShardingCtx):
+    """Map an eval_shape'd params pytree to PartitionSpecs."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_path_str(path), len(leaf.shape), ctx),
+        params_shape)
+
+
+def param_shardings(params_shape, ctx: ShardingCtx):
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        param_specs(params_shape, ctx))

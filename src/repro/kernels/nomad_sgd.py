@@ -1,0 +1,135 @@
+"""Pallas TPU kernel for the NOMAD block SGD update.
+
+TPU adaptation of the paper's compute hot spot (Algorithm 1, lines 16-21):
+sequential stochastic gradient updates over the ratings of one
+(worker x item-block) cell.  The paper exploits L3-cache locality by
+aligning per-thread memory to cache lines (§3.5); the TPU analogue is
+explicit HBM->VMEM blocking:
+
+  * the W tile (m_tile x k) and H tile (n_tile x k) stay *resident in VMEM*
+    across the whole grid (constant index_map, in/out aliased),
+  * the rating stream (rows/cols/vals/mask) is blocked along nnz and
+    streamed through VMEM chunk by chunk (the grid dimension),
+  * k is padded to 128 (VPU lane width); padding columns start at zero and
+    provably stay zero under the SGD update, so results equal the k<=128
+    reference exactly.
+
+The update itself is strictly sequential inside the kernel (fori_loop with
+dynamic row/col gathers) — NOMAD's serializability is preserved bit-for-bit;
+parallelism comes from the block structure, never from racing updates.
+
+VMEM budget (f32): W tile 8192x128 = 4 MiB, H tile 4096x128 = 2 MiB,
+rating chunk 1024 x (2 int32 + f32 + mask) ~ 16 KiB — comfortably inside
+the ~16 MiB/core working-set target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+
+LANE = 128
+
+
+def _kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
+            W_in_ref, H_in_ref, W_ref, H_ref):
+    """One grid step: apply a chunk of sequential SGD updates in VMEM."""
+    step = pl.program_id(0)
+    lr = scalars_ref[0]
+    lam = scalars_ref[1]
+
+    # On the first grid step, copy the (aliased) inputs into the outputs;
+    # later steps keep updating the same resident VMEM block.
+    @pl.when(step == 0)
+    def _init():
+        W_ref[...] = W_in_ref[...]
+        H_ref[...] = H_in_ref[...]
+
+    chunk = rows_ref.shape[0]
+
+    def body(t, _):
+        i = rows_ref[t]
+        j = cols_ref[t]
+        a = vals_ref[t]
+        m = mask_ref[t]
+        w = W_ref[i, :]
+        h = H_ref[j, :]
+        err = a - jnp.sum(w * h)
+        w_new = w - lr * (-err * h + lam * w)
+        h_new = h - lr * (-err * w + lam * h)
+        W_ref[i, :] = jnp.where(m, w_new, w)
+        H_ref[j, :] = jnp.where(m, h_new, h)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0, unroll=False)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "interpret"))
+def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
+                    chunk: int = 1024, interpret: bool = True):
+    """Pallas-accelerated NOMAD block update.  Same contract as
+    :func:`repro.kernels.ref.block_sgd_ref`.
+
+    ``interpret=True`` (default here) runs the kernel body in Python on CPU
+    — the validation mode for this repo; on real TPU pass ``False``.
+    """
+    m_tile, k = W.shape
+    n_tile = H.shape[0]
+    nnz = rows.shape[0]
+    dtype = W.dtype
+
+    # pad k to the 128-lane register width (zeros are SGD-invariant: see
+    # module docstring); pad nnz to a chunk multiple with masked no-ops.
+    k_pad = (-k) % LANE
+    nnz_pad = (-nnz) % chunk
+    Wp = jnp.pad(W, ((0, 0), (0, k_pad)))
+    Hp = jnp.pad(H, ((0, 0), (0, k_pad)))
+    rows_p = jnp.pad(rows.astype(jnp.int32), (0, nnz_pad))
+    cols_p = jnp.pad(cols.astype(jnp.int32), (0, nnz_pad))
+    vals_p = jnp.pad(vals.astype(dtype), (0, nnz_pad))
+    mask_p = jnp.pad(mask.astype(jnp.bool_), (0, nnz_pad))
+    n_chunks = max(1, (nnz + nnz_pad) // chunk)
+
+    scalars = jnp.array([lr, lam], dtype=dtype)
+    kp = k + k_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # scalars
+            pl.BlockSpec((chunk,), lambda s: (s,)),          # rows
+            pl.BlockSpec((chunk,), lambda s: (s,)),          # cols
+            pl.BlockSpec((chunk,), lambda s: (s,)),          # vals
+            pl.BlockSpec((chunk,), lambda s: (s,)),          # mask
+            pl.BlockSpec((m_tile, kp), lambda s: (0, 0)),    # W (resident)
+            pl.BlockSpec((n_tile, kp), lambda s: (0, 0)),    # H (resident)
+        ],
+        out_specs=[
+            pl.BlockSpec((m_tile, kp), lambda s: (0, 0)),
+            pl.BlockSpec((n_tile, kp), lambda s: (0, 0)),
+        ],
+    )
+
+    W_out, H_out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m_tile, kp), dtype),
+            jax.ShapeDtypeStruct((n_tile, kp), dtype),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(scalars, rows_p, cols_p, vals_p, mask_p, Wp, Hp)
+
+    return W_out[:, :k], H_out[:, :k]
+
+
+block_sgd_ref = _ref.block_sgd_ref  # re-export for convenience

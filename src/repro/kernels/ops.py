@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas kernels target TPU; on any other backend they
+run in ``interpret=True`` mode (Python emulation — correct, slow).  The
+XLA fallbacks in :mod:`repro.kernels.ref` are used by the dry-run (Pallas
+does not lower on the CPU backend) and whenever ``impl='xla'``.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .nomad_sgd import nomad_sgd_block
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *, impl: str = "auto",
+              chunk: int = 1024):
+    """NOMAD block SGD update.  impl in {'auto', 'pallas', 'xla'}."""
+    if impl == "xla" or (impl == "auto" and not on_tpu()):
+        return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam)
+    return nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam,
+                           chunk=chunk, interpret=not on_tpu())
+
+
+def flash_attention(q, k, v, *, causal=True, impl: str = "auto",
+                    block_q: int = 256, block_k: int = 256):
+    """Blockwise causal attention.  impl in {'auto','pallas','xla','dense'}."""
+    if impl == "dense":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    if impl == "xla" or (impl == "auto" and not on_tpu()):
+        from ..models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal)
+    from .flash_attn import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+               interpret=not on_tpu())

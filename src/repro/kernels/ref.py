@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``block_sgd_ref`` is *the* canonical semantics of a NOMAD block update:
+sequential SGD over the ratings of one (worker, item-block) cell, exactly
+Algorithm 1 lines 16-21 restricted to the cell.  Every other implementation
+(Pallas kernel, SPMD ring engine, discrete-event simulator) is validated
+against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_pair(w, h, a, lr, lam):
+    err = a - jnp.dot(w, h)
+    w_new = w - lr * (-err * h + lam * w)
+    h_new = h - lr * (-err * w + lam * h)
+    return w_new, h_new
+
+
+def block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam):
+    """Sequential masked SGD over a padded rating list.
+
+    W: (m_tile, k)  H: (n_tile, k)  rows/cols: (nnz,) int32 into the tiles,
+    vals/mask: (nnz,).  Padded entries (mask=False) are exact no-ops.
+    Returns updated (W, H).
+    """
+    lr = jnp.asarray(lr, dtype=W.dtype)
+    lam = jnp.asarray(lam, dtype=W.dtype)
+
+    def body(carry, x):
+        W, H = carry
+        i, j, a, m = x
+        w = W[i]
+        h = H[j]
+        w_new, h_new = sgd_pair(w, h, a, lr, lam)
+        w = jnp.where(m, w_new, w)
+        h = jnp.where(m, h_new, h)
+        return (W.at[i].set(w), H.at[j].set(h)), ()
+
+    (W, H), _ = jax.lax.scan(
+        body, (W, H),
+        (rows.astype(jnp.int32), cols.astype(jnp.int32),
+         vals.astype(W.dtype), mask))
+    return W, H
+
+
+def flash_attention_ref(q, k, v, causal=True, scale=None):
+    """Plain materialized attention — oracle for the flash kernel.
+
+    q: (B, Hq, S, D), k/v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if causal:
+        msk = jnp.tril(jnp.ones((S, S), dtype=bool))
+        logits = jnp.where(msk[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)

@@ -1,0 +1,224 @@
+"""Optimized-HLO analysis: collective wire bytes + loop-aware accounting.
+
+``compiled.cost_analysis()`` on the CPU backend visits ``while`` bodies
+once (HloCostAnalysis has no trip counts), and collective bytes are not
+reported at all.  This module parses the optimized HLO text:
+
+  * splits it into computations,
+  * finds every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (plus their async ``-start`` forms),
+  * recovers while-loop trip counts from the loop condition's comparison
+    constant (lax.scan lowers to exactly that pattern),
+  * multiplies each computation's collective bytes by the product of trip
+    counts on its call path from ENTRY,
+  * converts payload bytes to *wire* bytes per device with the standard
+    ring factors: AG/A2A (n-1)/n, RS (n-1)/n of input, AR 2(n-1)/n,
+    permute 1.
+
+The same trip-count map is used to correct cost_analysis FLOPs/bytes via
+the two-depth probe in dryrun.py (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> List[int]:
+    """All array sizes (bytes) in a (possibly tuple) HLO type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    payload_bytes: int
+    group_size: int
+    computation: str
+    multiplier: int = 1
+    semantic_bf16: bool = False   # explicitly bf16 psum promoted to f32
+                                  # by CPU float-normalization; a TPU
+                                  # lowering keeps it bf16 (half wire)
+
+    @property
+    def wire_bytes_tpu(self) -> float:
+        return self.wire_bytes * (0.5 if self.semantic_bf16 else 1.0)
+
+    @property
+    def wire_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return self.payload_bytes * (n - 1) / n
+        if self.kind == "reduce-scatter":
+            return self.payload_bytes * (n - 1) / n   # payload = input
+        if self.kind == "all-reduce":
+            return self.payload_bytes * 2 * (n - 1) / n
+        if self.kind == "all-to-all":
+            return self.payload_bytes * (n - 1) / n
+        return float(self.payload_bytes)              # collective-permute
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # computation headers sit at column 0:
+        #   %name (p: (s32[], f32[2,2])) -> (s32[], f32[2,2]) {
+        #   ENTRY %main.74_spmd (arg: f32[...]) -> f32[...] {
+        # the params may contain nested parens, so match greedily up to
+        # the trailing '{'.
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$",
+                     line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    const = None
+    for ln in cond_lines:
+        m = re.search(r"=\s*[su]32\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            const = int(m.group(1))
+    for ln in cond_lines:
+        if "compare" in ln and "direction=LT" in ln and const is not None:
+            return const
+    return const
+
+
+def analyze_collectives(hlo: str, total_devices: int
+                        ) -> Tuple[List[CollectiveOp], Dict[str, int]]:
+    """Returns (collective ops with loop multipliers applied,
+    {computation: multiplier})."""
+    comps = _split_computations(hlo)
+
+    # computation -> [(body, cond)] for while ops it contains
+    whiles: Dict[str, List[Tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if re.search(r"\bwhile\(", ln):
+                mb = re.search(r"body=%?([\w.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w.\-]+)", ln)
+                if mb and mc:
+                    whiles.setdefault(name, []).append(
+                        (mb.group(1), mc.group(1)))
+
+    # propagate multipliers from every root (ENTRY may not be detected by
+    # name; treat computations that nobody calls as roots)
+    called = {b for lst in whiles.values() for b, c in lst} | \
+             {c for lst in whiles.values() for b, c in lst}
+    # also computations referenced by calls/fusions count as called
+    for name, lines in comps.items():
+        for ln in lines:
+            for m in re.finditer(
+                    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)", ln):
+                called.add(m.group(1))
+
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        mult[name] = max(mult.get(name, 0), m)
+        for body, cond in whiles.get(name, ()):  # recurse into loop bodies
+            trip = _trip_count(comps.get(cond, [])) or 1
+            visit(body, m * trip)
+        # non-while calls keep the same multiplier
+        for ln in comps.get(name, ()):
+            for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", ln):
+                visit(mm.group(1), m)
+
+    for name in comps:
+        if name not in called:
+            visit(name, 1)
+
+    ops: List[CollectiveOp] = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|"
+                         r"all-to-all|collective-permute)"
+                         r"(-start)?\(", ln)
+            if not m:
+                continue
+            var, type_str, kind, start = (m.group(1), m.group(2),
+                                          m.group(3), m.group(4))
+            sizes = _shape_bytes(type_str)
+            if not sizes:
+                continue
+            is_tuple = type_str.strip().startswith("(")
+            if kind == "reduce-scatter" and not is_tuple:
+                # plain RS result is the scattered output; payload (input)
+                # = output * group size
+                payload = sizes[0]
+                g = _group_size(ln, total_devices)
+                payload *= g
+            else:
+                payload = max(sizes)
+                g = _group_size(ln, total_devices)
+            # shard_map-generated psums in this repo are always cast to
+            # bf16 before the reduction; an f32 result here is purely CPU
+            # float-normalization (TPU reduces bf16 natively).
+            sem_bf16 = var.startswith("psum") and "f32[" in type_str
+            ops.append(CollectiveOp(kind=kind, payload_bytes=payload,
+                                    group_size=g, computation=cname,
+                                    multiplier=mult.get(cname, 1),
+                                    semantic_bf16=sem_bf16))
+    return ops, mult
+
+
+def collective_summary(hlo: str, total_devices: int) -> Dict:
+    ops, mult = analyze_collectives(hlo, total_devices)
+    total_wire = sum(op.wire_bytes * op.multiplier for op in ops)
+    total_wire_tpu = sum(op.wire_bytes_tpu * op.multiplier for op in ops)
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + \
+            op.wire_bytes * op.multiplier
+    top = sorted(ops, key=lambda o: -o.wire_bytes * o.multiplier)[:8]
+    return {
+        "wire_bytes_per_device": total_wire,
+        "wire_bytes_per_device_tpu": total_wire_tpu,
+        "by_kind": by_kind,
+        "n_collectives": len(ops),
+        "top_ops": [
+            dict(kind=o.kind, payload=o.payload_bytes, group=o.group_size,
+                 mult=o.multiplier, comp=o.computation[:60])
+            for o in top],
+    }

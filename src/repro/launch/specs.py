@@ -1,0 +1,118 @@
+"""Shape/sharding spec builders shared by dryrun / train / serve.
+
+Everything here works on ``jax.eval_shape`` results — no allocation; the
+dry-run lowers against ShapeDtypeStructs carrying NamedShardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import ShardingCtx, param_specs
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim import adamw as optim
+from ..data.pipeline import lm_input_specs
+
+
+def _sds(shape_struct, ctx: ShardingCtx, spec: P):
+    return jax.ShapeDtypeStruct(shape_struct.shape, shape_struct.dtype,
+                                sharding=NamedSharding(ctx.mesh, spec))
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.key(0))
+
+
+def sharded_params_specs(cfg: ModelConfig, ctx: ShardingCtx):
+    ps = params_shape(cfg)
+    return ps, param_specs(ps, ctx)
+
+
+def train_state_struct(cfg: ModelConfig, ctx: ShardingCtx,
+                       opt_cfg: optim.AdamWConfig):
+    """ShapeDtypeStructs (with shardings) for the full train state."""
+    ps, pspecs = sharded_params_specs(cfg, ctx)
+    opt_shape = jax.eval_shape(
+        functools.partial(optim.adamw_init, cfg=opt_cfg), ps)
+
+    def opt_spec(path_key, leaf):
+        return pspecs  # m/v/master mirror params structure
+
+    opt_specs = {
+        "m": pspecs, "v": pspecs,
+        "step": P(),
+    }
+    if "master" in opt_shape:
+        opt_specs["master"] = pspecs
+
+    params_sds = jax.tree.map(lambda s, sp: _sds(s, ctx, sp), ps, pspecs)
+    opt_sds = jax.tree.map(
+        lambda s, sp: _sds(s, ctx, sp), opt_shape, opt_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return {"params": params_sds, "opt": opt_sds}
+
+
+def batch_dim_spec(B: int, ctx: ShardingCtx):
+    """Shard the batch over dp when divisible, else replicate."""
+    return ctx.dp if B % ctx.dp_size == 0 else None
+
+
+def batch_struct(cfg: ModelConfig, shape: dict, ctx: ShardingCtx):
+    """Input ShapeDtypeStructs for a (arch x shape) cell."""
+    raw = lm_input_specs(cfg, shape)
+    B = shape["global_batch"]
+    bspec = batch_dim_spec(B, ctx)
+    out = {}
+    for name, s in raw.items():
+        spec = [bspec] + [None] * (len(s.shape) - 1)
+        out[name] = _sds(s, ctx, P(*spec))
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Decode caches                                                        #
+# ------------------------------------------------------------------ #
+
+def _cache_leaf_spec(leaf_shape, cfg: ModelConfig, ctx: ShardingCtx,
+                     B: int, seq_axes):
+    """Classify a cache leaf by trailing dims; return its PartitionSpec.
+
+    KV cache  (..., B, S, Hkv, D)   -> seq sharded over ``seq_axes``
+    SSM conv  (..., B, K-1, d_in)   -> d_inner over tp
+    SSM state (..., B, d_in, N)     -> d_inner over tp
+    """
+    nd = len(leaf_shape)
+    bspec = batch_dim_spec(B, ctx)
+    if cfg.n_heads and leaf_shape[-2:] == (cfg.n_kv_heads, cfg.head_dim):
+        spec = [None] * (nd - 4) + [bspec, seq_axes, None, None]
+    elif leaf_shape[-1] == cfg.d_inner and \
+            leaf_shape[-2] == cfg.ssm_conv - 1:
+        spec = [None] * (nd - 3) + [bspec, None, ctx.tp]
+    elif cfg.ssm_state and leaf_shape[-1] == cfg.ssm_state and \
+            leaf_shape[-2] == cfg.d_inner:
+        spec = [None] * (nd - 3) + [bspec, ctx.tp, None]
+    else:
+        spec = [None] * nd
+    return P(*spec)
+
+
+def cache_struct(cfg: ModelConfig, B: int, S_max: int, ctx: ShardingCtx):
+    cache_shape = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, B, S_max))
+    # seq sharding: over tp when the batch covers dp; over *everything*
+    # for small-batch long-context (the long_500k B=1 cell)
+    if B % ctx.dp_size == 0:
+        seq_axes = ctx.tp
+    else:
+        dp = ctx.dp if isinstance(ctx.dp, tuple) else (ctx.dp,)
+        seq_axes = dp + (ctx.tp,)
+    return jax.tree.map(
+        lambda s: _sds(s, ctx,
+                       _cache_leaf_spec(s.shape, cfg, ctx, B, seq_axes)),
+        cache_shape)

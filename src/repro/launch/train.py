@@ -1,0 +1,143 @@
+"""Training step factory + CLI trainer.
+
+``make_train_step`` builds the jittable (state, batch) -> (state, metrics)
+function used both by the real trainer below and by the multi-pod dry-run.
+
+CLI (runs a real small-model training on whatever devices exist):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2_5_32b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import ShardingCtx
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim import adamw as optim
+from ..optim.schedule import cosine_warmup
+
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ShardingCtx],
+                    opt_cfg: optim.AdamWConfig, *, impl: str = "xla",
+                    total_steps: int = 10000, warmup: int = 100,
+                    grad_accum: int = 1):
+    """(state, batch) -> (state, metrics).
+
+    grad_accum > 1 splits the global batch into microbatches processed
+    sequentially with f32 gradient accumulation — the standard
+    activation-memory lever: live activations shrink by the accumulation
+    factor while arithmetic is unchanged (§Perf iteration M2).
+    """
+    def grads_and_metrics(params, batch):
+        def loss_fn(p):
+            return T.loss_and_metrics(p, cfg, batch, ctx=ctx, impl=impl)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            grads, metrics = grads_and_metrics(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % grad_accum == 0, (B, grad_accum)
+                return x.reshape((grad_accum, B // grad_accum)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(acc, mb):
+                g, m = grads_and_metrics(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / grad_accum,
+                    acc, g)
+                return acc, m
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_stack = jax.lax.scan(acc_step, zero, micro)
+            metrics = jax.tree.map(lambda s: jnp.mean(s), metrics_stack)
+
+        lr_scale = cosine_warmup(
+            state["opt"]["step"], base_lr=1.0, warmup=warmup,
+            total=total_steps)
+        new_params, new_opt, opt_metrics = optim.adamw_update(
+            params, grads, state["opt"], opt_cfg, lr_scale=lr_scale)
+        return ({"params": new_params, "opt": new_opt},
+                {**metrics, **opt_metrics})
+
+    return train_step
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: optim.AdamWConfig):
+    params = T.init_params(key, cfg)
+    return {"params": params, "opt": optim.adamw_init(params, opt_cfg)}
+
+
+def main():
+    import argparse
+    import numpy as np
+    from .. import configs
+    from ..data.pipeline import TokenPipeline
+    from ..checkpoint import AsyncCheckpointer, restore_checkpoint, \
+        latest_step
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_32b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    opt_cfg = optim.AdamWConfig(lr=args.lr)
+    step_fn = jax.jit(make_train_step(cfg, None, opt_cfg,
+                                      total_steps=args.steps),
+                      donate_argnums=0)
+
+    state = init_state(jax.random.key(0), cfg, opt_cfg)
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir)
+        restored, rstep = restore_checkpoint(args.ckpt_dir, state)
+        if restored is not None:
+            state, start_step = restored, rstep
+            print(f"resumed from step {rstep}")
+
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch,
+                         embed_input=cfg.embed_input, d_model=cfg.d_model)
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.wait()
+    dt = time.time() - t0
+    print(f"{args.steps - start_step} steps in {dt:.1f}s "
+          f"({(args.steps - start_step) / dt:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Attention: GQA projections, chunked-flash train/prefill path, and the
+flash-decode path with sequence-sharded KV cache.
+
+The decode formulation is deliberately written as plain einsums +
+reductions over the (possibly sharded) sequence axis: under GSPMD the
+max / sum reductions over a sharded axis lower to the small
+all-reduces of distributed flash-decode (partial max, partial sumexp,
+partial weighted values), which is the NOMAD owner-computes discipline
+applied to the KV cache — KV blocks never move, only O(B·H·D) partial
+statistics do (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, rope as rope_mod
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(kq, d, cfg.n_heads * hd, dtype,
+                                bias=cfg.qkv_bias),
+        "wk": layers.dense_init(kk, d, cfg.n_kv_heads * hd, dtype,
+                                bias=cfg.qkv_bias),
+        "wv": layers.dense_init(kv, d, cfg.n_kv_heads * hd, dtype,
+                                bias=cfg.qkv_bias),
+        "wo": layers.dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Train / prefill: chunked causal attention (online softmax over KV       #
+# chunks via lax.scan) — never materializes the S x S score matrix.       #
+# --------------------------------------------------------------------- #
+
+def chunked_attention(q, k, v, *, causal=True, chunk=1024):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D).  Returns (B, Hq, S, D).
+
+    Blockwise online-softmax identical in math to flash attention; the
+    XLA fallback used on non-TPU backends and by the dry-run.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nk = S // chunk
+    scale = 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    # fold the GQA group into the query-head axis of the kv heads
+    qg = qf.reshape(B, Hkv, group, S, D)
+    kc = k.reshape(B, Hkv, nk, chunk, D)
+    vc = v.reshape(B, Hkv, nk, chunk, D)
+
+    q_pos = jnp.arange(S)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = xs
+        kf = k_blk.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+        if causal:
+            k_pos = blk_idx * chunk + jnp.arange(chunk)
+            msk = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), ()
+
+    m0 = jnp.full((B, Hkv, group, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, group, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Decode: one query token against a (seq-sharded) KV cache.               #
+# --------------------------------------------------------------------- #
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """q: (B, Hq, D); caches: (B, S_max, Hkv, D); cur_len: () int32.
+
+    Pure einsum + reductions over the cache sequence axis so GSPMD turns
+    the reductions into small all-reduces when the cache is seq-sharded.
+    """
+    B, Hq, D = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, D)
+    kf = k_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, kf)          # (B,Hkv,g,S)
+    valid = jnp.arange(S)[None, None, None, :] < cur_len
+    logits = jnp.where(valid, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)             # psum(max)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)                  # psum(sum)
+    out = jnp.einsum("bhgs,bshd->bhgd", p,
+                     v_cache.astype(jnp.float32))           # psum(sum)
+    out = out / jnp.maximum(l, 1e-30)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Full attention sublayer (projections + rope + cache handling).          #
+# --------------------------------------------------------------------- #
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hkv, D)
+    v: jax.Array
+
+
+def attn_apply(p, x, cfg, *, angles=None, impl="xla", ctx=None):
+    """Training / prefill self-attention.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = layers.dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = layers.dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = layers.dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if angles is not None:
+        q = rope_mod.apply_rotary(q, angles)
+        k = rope_mod.apply_rotary(k, angles)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "pallas":
+        from ..kernels.flash_attn import flash_attention
+        o = flash_attention(qt, kt, vt, causal=True,
+                            interpret=jax.default_backend() != "tpu")
+    elif impl == "xla_naive":
+        # baseline without the custom flash VJP (saves every probability
+        # block for backward — kept for the §Perf before/after)
+        o = chunked_attention(qt, kt, vt, causal=True)
+    else:
+        from .flash_xla import flash_attention_xla
+        o = flash_attention_xla(qt, kt, vt, True, cfg.attn_chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * hd)
+    if ctx is not None and cfg.tp_collectives == "manual":
+        from ..distributed.tp import row_parallel_dense
+        out = row_parallel_dense(o, p["wo"]["w"], ctx,
+                                 bias=p["wo"].get("b"))
+    else:
+        out = layers.dense(p["wo"], o)
+    cache = KVCache(k=k, v=v)
+    return out, cache
+
+
+def attn_decode(p, x, cache: KVCache, cfg, *, pos, angles=None,
+                ctx=None):
+    """Single-token decode.  x: (B, 1, d); cache seq axis may be sharded.
+
+    Returns (out (B, 1, d), updated cache).
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    if ctx is not None and cfg.tp_collectives == "manual":
+        # 2D-TP decode projections: weights stay sharded over BOTH axes;
+        # the (tiny) activations move instead of the (huge) weights
+        from ..distributed.tp import col_parallel_dense_2dtp as c2d
+        q = c2d(x, p["wq"]["w"], ctx, bias=p["wq"].get("b"))[:, 0]
+        k = c2d(x, p["wk"]["w"], ctx, bias=p["wk"].get("b"))[:, 0]
+        v = c2d(x, p["wv"]["w"], ctx, bias=p["wv"].get("b"))[:, 0]
+        q = q.reshape(B, cfg.n_heads, hd)
+        k = k.reshape(B, cfg.n_kv_heads, hd)
+        v = v.reshape(B, cfg.n_kv_heads, hd)
+    else:
+        xq = x[:, 0]
+        q = layers.dense(p["wq"], xq).reshape(B, cfg.n_heads, hd)
+        k = layers.dense(p["wk"], xq).reshape(B, cfg.n_kv_heads, hd)
+        v = layers.dense(p["wv"], xq).reshape(B, cfg.n_kv_heads, hd)
+    if angles is not None:
+        q = rope_mod.apply_rotary(q[:, None], angles)[:, 0]
+        k = rope_mod.apply_rotary(k[:, None], angles)[:, 0]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k[:, None].astype(cache.k.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v[:, None].astype(cache.v.dtype), pos, axis=1)
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    o2 = o.reshape(B, cfg.n_heads * hd)
+    if ctx is not None and cfg.tp_collectives == "manual":
+        from ..distributed.tp import row_parallel_dense_2dtp
+        out = row_parallel_dense_2dtp(o2[:, None], p["wo"]["w"], ctx,
+                                      bias=p["wo"].get("b"))[:, 0]
+    else:
+        out = layers.dense(p["wo"], o2)
+    return out[:, None], KVCache(k=k_cache, v=v_cache)

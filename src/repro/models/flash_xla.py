@@ -1,0 +1,138 @@
+"""Pure-XLA flash attention with a custom VJP — the memory-bound fix.
+
+The naive chunked attention (attention.chunked_attention) is numerically
+flash, but differentiating *through* its scan makes JAX save every
+per-chunk probability block for the backward pass: at 4k train shapes
+that alone was ~87 GB/device of the 130 GB/device temp footprint measured
+in the baseline dry-run (EXPERIMENTS.md §Perf, iteration M1).
+
+This version implements the flash backward recurrence explicitly
+[Dao et al. 2022, alg. 4]: the forward saves only (q, k, v, o, L) where
+L = m + log(l) is the (B, H, S) log-normalizer; the backward recomputes
+each probability block on the fly:
+
+    delta = rowsum(do * o)
+    p     = exp(q k^T * scale - L)
+    dv   += p^T do
+    ds    = p * (do v^T - delta) * scale
+    dq   += ds k          (accumulated over kv blocks)
+    dk   += ds^T q
+
+Activation cost per layer drops from O(S^2/chunk) blocks to O(S) rows.
+The same code path serves TPU dry-runs (it is pure jnp) and is the
+reference against which kernels/flash_attn.py validates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fold_gqa(q, k, v):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    return (q.reshape(B, Hkv, g, S, D), k, v, (B, Hq, Hkv, g, S, D))
+
+
+def _fwd_impl(q, k, v, causal, chunk, scale):
+    qg, kf, vf, (B, Hq, Hkv, g, S, D) = _fold_gqa(q, k, v)
+    nk = S // chunk
+    qf = qg.astype(jnp.float32) * scale
+    kc = kf.reshape(B, Hkv, nk, chunk, D)
+    vc = vf.reshape(B, Hkv, nk, chunk, D)
+    q_pos = jnp.arange(S)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                       k_blk.astype(jnp.float32))
+        if causal:
+            k_pos = blk * chunk + jnp.arange(chunk)
+            s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None,
+                                                             None],
+                          s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc), ()
+
+    m0 = jnp.full((B, Hkv, g, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.arange(nk)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).reshape(B, Hq, S, D).astype(q.dtype)
+    L = m + jnp.log(l_safe)                       # (B, Hkv, g, S)
+    return out, L
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_xla(q, k, v, causal=True, chunk=1024):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D).  Differentiable."""
+    chunk = min(chunk, q.shape[2])
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, _ = _fwd_impl(q, k, v, causal, chunk, scale)
+    return out
+
+
+def _fwd(q, k, v, causal, chunk):
+    chunk = min(chunk, q.shape[2])
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, L = _fwd_impl(q, k, v, causal, chunk, scale)
+    return out, (q, k, v, out, L)
+
+
+def _bwd(causal, chunk, res, do):
+    q, k, v, out, L = res
+    chunk = min(chunk, q.shape[2])
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qg, kf, vf, (B, Hq, Hkv, g, S, D) = _fold_gqa(q, k, v)
+    nk = S // chunk
+    qf = qg.astype(jnp.float32)
+    dog = do.reshape(B, Hkv, g, S, D).astype(jnp.float32)
+    og = out.reshape(B, Hkv, g, S, D).astype(jnp.float32)
+    delta = jnp.sum(dog * og, axis=-1)            # (B,Hkv,g,S)
+    kc = jnp.moveaxis(kf.reshape(B, Hkv, nk, chunk, D), 2, 0)
+    vc = jnp.moveaxis(vf.reshape(B, Hkv, nk, chunk, D), 2, 0)
+    q_pos = jnp.arange(S)
+
+    def step(dq_acc, xs):
+        k_blk, v_blk, blk = xs
+        kb = k_blk.astype(jnp.float32)
+        vb = v_blk.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb) * scale
+        if causal:
+            k_pos = blk * chunk + jnp.arange(chunk)
+            s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None,
+                                                             None],
+                          s, NEG_INF)
+        p = jnp.exp(s - L[..., None])             # (B,Hkv,g,S,chunk)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vb)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Hkv, g, S, D), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(
+        step, dq0, (kc, vc, jnp.arange(nk)))
+    dq = dq.reshape(B, Hq, S, D).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 2).reshape(B, Hkv, S, D).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 2).reshape(B, Hkv, S, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_xla.defvjp(_fwd, _bwd)

@@ -1,0 +1,86 @@
+"""Core layers: params are plain nested dicts of jnp arrays; every layer is
+an (init, apply) pair.  No module framework — keeps pytrees transparent for
+sharding rules, scan-stacking and checkpointing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, dtype, stddev):
+    # note: multiply in f32 *then* cast — and use a python float so a
+    # numpy scalar can't silently promote bf16 params back to f32
+    sample = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (float(stddev) * sample).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, bias=False, stddev=None):
+    stddev = stddev if stddev is not None else (1.0 / np.sqrt(d_in))
+    p = {"w": truncated_normal(key, (d_in, d_out), dtype, stddev)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_init(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype),
+        "up": dense_init(k2, d, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x))
+                 * dense(p["up"], x))
+
+
+def embedding_init(key, vocab, d, dtype):
+    return {"table": truncated_normal(key, (vocab, d), dtype, 1.0)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def cross_entropy(logits, labels, ignore_index=-100):
+    """Mean token cross-entropy in f32 with stable logsumexp.
+
+    logits: (..., V) any float dtype; labels: (...) int32.
+
+    The gold logit is extracted with a one-hot reduction rather than
+    take_along_axis: under GSPMD with vocab-sharded logits this lowers to
+    a local masked reduce + one small all-reduce instead of a gather over
+    the sharded axis.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    losses = lse - gold
+    valid = labels != ignore_index
+    losses = jnp.where(valid, losses, 0.0)
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,160 @@
+"""Mamba-1 block (Falcon-Mamba / Jamba SSM layers), TPU-native.
+
+Hardware adaptation (DESIGN.md §2): the CUDA selective-scan kernel fuses a
+sequential recurrence in SRAM.  On TPU we use a two-level scan instead:
+
+  * outer ``lax.scan`` over sequence *chunks* (S/Q steps) carries the
+    (B, d_inner, N) recurrent state — cheap, sequential;
+  * within a chunk, a log-depth ``associative_scan`` over the first-order
+    recurrence h_t = a_t * h_{t-1} + b_t materializes only
+    (B, Q, d_inner_local, N) in f32 — sized to fit HBM comfortably after
+    TP-sharding d_inner (Q=128..256), and numerically stable (no
+    exponential rescaling trick needed).
+
+The d_inner axis is Megatron-sharded over `model`: in_proj is column-
+parallel, out_proj row-parallel, and the entire scan is local to the
+shard — the recurrence needs no collectives at all (the paper's
+owner-computes discipline: state chunks have a single owner).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, K-1, d_inner) — last K-1 pre-conv inputs
+    ssm: jax.Array     # (B, d_inner, N)   — recurrent state, f32
+
+
+def mamba_init(key, cfg, dtype):
+    d, di, N, r, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.ssm_conv)
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[0], (di,), jnp.float32)
+                 * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt + jnp.log1p(-jnp.exp(-dt))   # inverse softplus
+    return {
+        "in_proj": layers.dense_init(ks[1], d, 2 * di, dtype),
+        "conv_w": layers.truncated_normal(ks[2], (K, di), dtype,
+                                          1.0 / np.sqrt(K)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[3], di, r + 2 * N, dtype),
+        "dt_proj": layers.dense_init(ks[4], r, di, dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_scan_chunked(a, b, h0, chunk):
+    """First-order recurrence h_t = a_t h_{t-1} + b_t over axis 1.
+
+    a, b: (B, S, d, N) f32; h0: (B, d, N) f32.
+    Returns (h at every t (B, S, d, N), final state).
+    """
+    B, S, d, N = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    a_c = a.reshape(B, nc, chunk, d, N)
+    b_c = b.reshape(B, nc, chunk, d, N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+
+    def outer(h, xs):
+        ac, bc = xs                       # (B, chunk, d, N)
+        A_pref, B_pref = jax.lax.associative_scan(
+            combine, (ac, bc), axis=1)
+        h_all = A_pref * h[:, None] + B_pref
+        return h_all[:, -1], h_all
+
+    h_fin, h_seq = jax.lax.scan(
+        outer, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    return jnp.moveaxis(h_seq, 0, 1).reshape(B, S, d, N), h_fin
+
+
+def _causal_conv(x, w, b, K, history=None):
+    """Depthwise causal conv, width K.  x: (B, S, di); w: (K, di).
+    history: (B, K-1, di) previous inputs (decode/prefill chaining)."""
+    if history is None:
+        history = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_apply(p, x, cfg, *, state: SSMState = None, chunk: int = 256
+                ) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence forward.  x: (B, S, d).  Returns (y, final state)."""
+    B, S, _ = x.shape
+    di, N, r, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = layers.dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di)
+    hist = None if state is None else state.conv
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"], K,
+                                      hist))
+
+    dbl = layers.dense(p["x_proj"], x_conv)
+    dt_r, B_t, C_t = jnp.split(dbl, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(
+        layers.dense(p["dt_proj"], dt_r).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                 # (di,N) f32
+
+    a = jnp.exp(dt[..., None] * A)                           # (B,S,di,N)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * \
+        B_t.astype(jnp.float32)[..., None, :]                # (B,S,di,N)
+    h0 = (jnp.zeros((B, di, N), jnp.float32) if state is None
+          else state.ssm)
+    h, h_fin = _ssm_scan_chunked(a, b, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C_t.astype(jnp.float32))
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = layers.dense(p["out_proj"], y)
+    new_state = SSMState(conv=x_in[:, S - (K - 1):, :], ssm=h_fin)
+    return out, new_state
+
+
+def mamba_decode(p, x, state: SSMState, cfg) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode.  x: (B, 1, d)."""
+    B = x.shape[0]
+    di, N, r, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = layers.dense(p["in_proj"], x[:, 0])
+    x_in, z = jnp.split(xz, 2, axis=-1)                      # (B, di)
+    conv_hist = jnp.concatenate([state.conv, x_in[:, None]], axis=1)
+    x_conv = sum(conv_hist[:, i] * p["conv_w"][i] for i in range(K))
+    x_conv = jax.nn.silu(x_conv + p["conv_b"])
+
+    dbl = layers.dense(p["x_proj"], x_conv)
+    dt_r, B_t, C_t = jnp.split(dbl, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(
+        layers.dense(p["dt_proj"], dt_r).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # (B, di)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                           # (B,di,N)
+    b = (dt * x_conv.astype(jnp.float32))[..., None] * \
+        B_t.astype(jnp.float32)[:, None, :]
+    h = a * state.ssm + b
+    y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+    y = y + p["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = layers.dense(p["out_proj"], y)
+    return out[:, None], SSMState(conv=conv_hist[:, 1:], ssm=h)
+
+
+def init_ssm_state(cfg, B, dtype) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32))

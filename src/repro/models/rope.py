@@ -1,0 +1,50 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim/2 frequency bands into three
+sections (temporal, height, width), each rotated by its own position
+stream.  For text-only inputs all three streams equal the sequence index,
+which reduces M-RoPE to RoPE exactly; the stub frontend supplies real
+(t, h, w) position triples for vision tokens.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float
+                ) -> jnp.ndarray:
+    """positions: (..., S) -> angles (..., S, head_dim/2)."""
+    return positions[..., None].astype(jnp.float32) * _freqs(head_dim, theta)
+
+
+def mrope_angles(positions3: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """positions3: (B, S, 3) -> angles (B, S, head_dim/2) with the
+    frequency bands split into (t, h, w) sections."""
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    base = _freqs(head_dim, theta)                        # (hd/2,)
+    ang = positions3[..., None, :].astype(jnp.float32) * \
+        base[None, None, :, None]                         # (B, S, hd/2, 3)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=head_dim // 2)  # (hd/2,)
+    return jnp.take_along_axis(
+        ang, sec_id[None, None, :, None], axis=-1)[..., 0]
+
+
+def apply_rotary(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); angles: (B, S, D/2) or (S, D/2)."""
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)

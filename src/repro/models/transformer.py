@@ -1,0 +1,332 @@
+"""Decoder-only LM composition covering all assigned architecture families.
+
+Layer stacking uses period-stacked ``lax.scan``: the repeating pattern of
+``cfg.period`` layers (1 for uniform stacks, 8 for Jamba's 1:7
+attention:SSM interleave with MoE every 2nd layer) is scanned
+``cfg.n_periods`` times with parameters stacked on the leading axis —
+one compiled copy of the period regardless of depth, which keeps the
+dry-run HLO small and the remat policy uniform.  Prologue layers (Kimi's
+leading dense layer) run unstacked before the scan.
+
+Three entry points:
+  loss_and_metrics  — training objective (chunked-flash attention)
+  prefill           — full-sequence forward returning KV/SSM caches
+  decode_step       — single-token step against (possibly seq-sharded)
+                      caches via flash-decode
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention, layers, mamba, moe, rope
+from .config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Init                                                                    #
+# --------------------------------------------------------------------- #
+
+def _layer_init(key, cfg: ModelConfig, idx: int):
+    dt = _dtype(cfg)
+    kinds = (cfg.layer_kind(idx), cfg.mlp_kind(idx))
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": layers.rmsnorm_init(cfg.d_model)}
+    if kinds[0] == "attn":
+        p["mixer"] = attention.attn_init(k1, cfg, dt)
+    else:
+        p["mixer"] = mamba.mamba_init(k1, cfg, dt)
+    if kinds[1] != "none":
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model)
+        if kinds[1] == "moe":
+            p["moe"] = moe.moe_init(k2, cfg, dt)
+        else:
+            p["mlp"] = layers.swiglu_init(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: Dict[str, Any] = {}
+    if cfg.embed_input:
+        params["embed"] = layers.embedding_init(
+            keys[-1], cfg.vocab_size, cfg.d_model, dt)
+    params["final_norm"] = layers.rmsnorm_init(cfg.d_model)
+    params["lm_head"] = layers.dense_init(
+        keys[-2], cfg.d_model, cfg.vocab_size, dt)
+
+    params["prologue"] = [
+        _layer_init(keys[i], cfg, i) for i in range(cfg.n_prologue)]
+
+    period, n_per = cfg.period, cfg.n_periods
+    blocks: Dict[str, Any] = {}
+    for pos in range(period):
+        per_step = [
+            _layer_init(keys[cfg.n_prologue + s * period + pos], cfg,
+                        cfg.n_prologue + s * period + pos)
+            for s in range(n_per)]
+        blocks[f"pos{pos}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per_step)
+    params["blocks"] = blocks
+    return params
+
+
+# --------------------------------------------------------------------- #
+# Caches                                                                  #
+# --------------------------------------------------------------------- #
+
+def _layer_cache_init(cfg, idx, B, S_max, dt):
+    if cfg.layer_kind(idx) == "attn":
+        shape = (B, S_max, cfg.n_kv_heads, cfg.head_dim)
+        return attention.KVCache(k=jnp.zeros(shape, dt),
+                                 v=jnp.zeros(shape, dt))
+    return mamba.init_ssm_state(cfg, B, dt)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    dt = _dtype(cfg)
+    cache: Dict[str, Any] = {
+        "prologue": [_layer_cache_init(cfg, i, B, S_max, dt)
+                     for i in range(cfg.n_prologue)],
+        "blocks": {},
+    }
+    for pos in range(cfg.period):
+        idx = cfg.n_prologue + pos
+        per = [_layer_cache_init(cfg, idx, B, S_max, dt)
+               for _ in range(cfg.n_periods)]
+        cache["blocks"][f"pos{pos}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per)
+    return cache
+
+
+# --------------------------------------------------------------------- #
+# Apply                                                                   #
+# --------------------------------------------------------------------- #
+
+def _constrain(x, ctx, *spec):
+    return ctx.constrain(x, *spec) if ctx is not None else x
+
+
+def _layer_apply_seq(p, x, cfg, idx, angles, ctx, impl, want_cache):
+    """Full-sequence layer.  Returns (x, cache_or_None, aux)."""
+    kind, mlpkind = cfg.layer_kind(idx), cfg.mlp_kind(idx)
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache = None
+    if kind == "attn":
+        mix, kv = attention.attn_apply(p["mixer"], h, cfg, angles=angles,
+                                       impl=impl, ctx=ctx)
+        cache = kv if want_cache else None
+    else:
+        mix, st = mamba.mamba_apply(p["mixer"], h, cfg,
+                                    chunk=cfg.ssm_chunk)
+        cache = st if want_cache else None
+    x = x + mix
+    x = _constrain(x, ctx, ctx.dp if ctx else None, None, None)
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "dropped": jnp.zeros((), jnp.float32)}
+    if mlpkind != "none":
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if mlpkind == "moe":
+            y, aux = moe.moe_apply(p["moe"], h, cfg, ctx)
+        else:
+            y = _swiglu(p["mlp"], h, cfg, ctx)
+        x = x + y
+        x = _constrain(x, ctx, ctx.dp if ctx else None, None, None)
+    return x, cache, aux
+
+
+def _swiglu(p, h, cfg, ctx, decode=False):
+    """SwiGLU with optionally manual (bf16-psum) row-parallel down proj;
+    in decode, the gate/up projections use 2D-TP (weights never move)."""
+    if ctx is not None and cfg.tp_collectives == "manual":
+        from ..distributed.tp import (row_parallel_dense,
+                                      row_parallel_dense_2dtp,
+                                      col_parallel_dense_2dtp)
+        if decode:
+            g = col_parallel_dense_2dtp(h, p["gate"]["w"], ctx,
+                                        bias=p["gate"].get("b"))
+            u = col_parallel_dense_2dtp(h, p["up"]["w"], ctx,
+                                        bias=p["up"].get("b"))
+            inter = jax.nn.silu(g) * u
+            return row_parallel_dense_2dtp(inter, p["down"]["w"], ctx,
+                                           bias=p["down"].get("b"))
+        inter = jax.nn.silu(layers.dense(p["gate"], h)) * \
+            layers.dense(p["up"], h)
+        return row_parallel_dense(inter, p["down"]["w"], ctx,
+                                  bias=p["down"].get("b"))
+    return layers.swiglu(p, h)
+
+
+def _layer_apply_decode(p, x, cfg, idx, cache, pos_scalar, angles, ctx):
+    kind, mlpkind = cfg.layer_kind(idx), cfg.mlp_kind(idx)
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mix, new_cache = attention.attn_decode(
+            p["mixer"], h, cache, cfg, pos=pos_scalar, angles=angles,
+            ctx=ctx)
+    else:
+        mix, new_cache = mamba.mamba_decode(p["mixer"], h, cache, cfg)
+    x = x + mix
+    if mlpkind != "none":
+        h = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if mlpkind == "moe":
+            y, _ = moe.moe_apply(p["moe"], h, cfg, ctx)
+        else:
+            y = _swiglu(p["mlp"], h, cfg, ctx, decode=True)
+        x = x + y
+    return x, new_cache
+
+
+def _angles_for(cfg, positions, B):
+    """positions: (B, S) int or (B, S, 3) for mrope."""
+    if cfg.n_heads == 0:
+        return None
+    if cfg.rope_kind == "mrope":
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(
+                positions[..., None], positions.shape + (3,))
+        return rope.mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                                 cfg.mrope_sections)
+    return rope.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def forward(params, cfg: ModelConfig, inputs, *, positions=None, ctx=None,
+            impl="xla", want_cache=False):
+    """Full-sequence forward.
+
+    inputs: int tokens (B, S) when cfg.embed_input else embeddings
+    (B, S, d).  Returns (logits, caches_or_None, aux).
+    """
+    if cfg.embed_input:
+        B, S = inputs.shape
+        if ctx is not None and cfg.tp_collectives == "manual":
+            from ..distributed.tp import vocab_parallel_embed
+            x = vocab_parallel_embed(params["embed"]["table"], inputs, ctx)
+        else:
+            x = layers.embed(params["embed"], inputs)
+    else:
+        B, S, _ = inputs.shape
+        x = inputs.astype(_dtype(cfg))
+    x = _constrain(x, ctx, ctx.dp if ctx else None, None, None)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    angles = _angles_for(cfg, positions, B)
+
+    aux_sum = {"aux_loss": jnp.zeros((), jnp.float32),
+               "dropped": jnp.zeros((), jnp.float32)}
+    caches: Dict[str, Any] = {"prologue": [], "blocks": {}}
+
+    for i, p in enumerate(params["prologue"]):
+        x, c, aux = _layer_apply_seq(p, x, cfg, i, angles, ctx, impl,
+                                     want_cache)
+        caches["prologue"].append(c)
+        aux_sum = jax.tree.map(jnp.add, aux_sum, aux)
+
+    period = cfg.period
+
+    def period_body(x, step_params):
+        auxes = []
+        caches_p = {}
+        for pos in range(period):
+            idx = cfg.n_prologue + pos
+            x, c, aux = _layer_apply_seq(
+                step_params[f"pos{pos}"], x, cfg, idx, angles, ctx, impl,
+                want_cache)
+            caches_p[f"pos{pos}"] = c
+            auxes.append(aux)
+        aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+        return x, (caches_p, aux)
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    x, (cache_stack, aux_stack) = jax.lax.scan(
+        body, x, params["blocks"],
+        unroll=cfg.n_periods if cfg.scan_unroll else 1)
+    caches["blocks"] = cache_stack
+    aux_sum = jax.tree.map(lambda acc, s: acc + jnp.sum(s), aux_sum,
+                           aux_stack)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.dense(params["lm_head"], x)
+    logits = _constrain(logits, ctx, ctx.dp if ctx else None, None,
+                        ctx.tp if ctx else None)
+    return logits, (caches if want_cache else None), aux_sum
+
+
+def loss_and_metrics(params, cfg: ModelConfig, batch, *, ctx=None,
+                     impl="xla", aux_weight=0.01):
+    """batch: {'inputs', 'labels', optional 'positions'}."""
+    logits, _, aux = forward(params, cfg, batch["inputs"],
+                             positions=batch.get("positions"), ctx=ctx,
+                             impl=impl)
+    xent = layers.cross_entropy(logits, batch["labels"])
+    loss = xent + aux_weight * aux["aux_loss"]
+    return loss, {"loss": loss, "xent": xent, **aux}
+
+
+def prefill(params, cfg: ModelConfig, inputs, *, positions=None, ctx=None,
+            impl="xla"):
+    """Returns (last-position logits (B, V), caches)."""
+    logits, caches, _ = forward(params, cfg, inputs, positions=positions,
+                                ctx=ctx, impl=impl, want_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, inputs, cache, pos, *, ctx=None):
+    """One decode step.
+
+    inputs: (B, 1) tokens or (B, 1, d) embeddings; pos: () int32 current
+    position (number of tokens already in the cache).  Returns
+    (logits (B, V), new_cache).
+    """
+    if cfg.embed_input:
+        x = layers.embed(params["embed"], inputs)
+    else:
+        x = inputs.astype(_dtype(cfg))
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    angles = _angles_for(cfg, positions, B)
+
+    new_cache: Dict[str, Any] = {"prologue": [], "blocks": {}}
+    for i, p in enumerate(params["prologue"]):
+        x, c = _layer_apply_decode(p, x, cfg, i, cache["prologue"][i],
+                                   pos, angles, ctx)
+        new_cache["prologue"].append(c)
+
+    period = cfg.period
+
+    def period_body(x, xs):
+        step_params, step_cache = xs
+        new_c = {}
+        for ppos in range(period):
+            idx = cfg.n_prologue + ppos
+            x, c = _layer_apply_decode(
+                step_params[f"pos{ppos}"], x, cfg, idx,
+                step_cache[f"pos{ppos}"], pos, angles, ctx)
+            new_c[f"pos{ppos}"] = c
+        return x, new_c
+
+    x, blocks_cache = jax.lax.scan(
+        period_body, x, (params["blocks"], cache["blocks"]),
+        unroll=cfg.n_periods if cfg.scan_unroll else 1)
+    new_cache["blocks"] = blocks_cache
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if ctx is not None and cfg.tp_collectives == "manual":
+        from ..distributed.tp import col_parallel_dense_2dtp
+        logits = col_parallel_dense_2dtp(
+            x, params["lm_head"]["w"], ctx,
+            bias=params["lm_head"].get("b"))[:, 0]
+    else:
+        logits = layers.dense(params["lm_head"], x)[:, 0]
+    return logits, new_cache

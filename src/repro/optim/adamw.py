@@ -1,0 +1,111 @@
+"""In-repo optimizers (optax is not a dependency).
+
+AdamW with configurable state dtype: ``state_dtype='bfloat16'`` halves the
+m/v memory — the distributed-optimization knob that decides whether
+llama3-405b training states fit a 256-chip pod (see EXPERIMENTS.md
+§Dry-run).  States are stored in the same sharding as their parameters
+(ZeRO: parameters are already FSDP-sharded, so optimizer state is too).
+
+Master weights: updates are computed in f32 from the bf16 params; with
+``master_dtype='float32'`` a f32 master copy is kept (classic mixed
+precision); with ``None`` the bf16 params are the only copy (saves 4
+bytes/param at a small convergence cost — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"     # 'float32' | 'bfloat16'
+    master_dtype: Optional[str] = "float32"   # None -> no master copy
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    sd = jnp.dtype(cfg.state_dtype)
+    state = {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=sd), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=sd), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_dtype is not None:
+        # force a real copy: when params are already master_dtype, astype
+        # would alias the same buffer and break donation (donate twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.dtype(cfg.master_dtype),
+                                copy=True), params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+
+    sd = jnp.dtype(cfg.state_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        mw = master.astype(jnp.float32)
+        new_master = mw - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                + cfg.weight_decay * mw)
+        return (new_master.astype(p.dtype), m32.astype(sd), v32.astype(sd),
+                new_master.astype(master.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], masters)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda o: o[3], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_state, {"grad_norm": gnorm,
+                                   "lr": jnp.asarray(lr, jnp.float32)}
+
+
+# ----------------------------------------------------------------- #
+# SGD + momentum (used by the matrix-completion LM-free examples).    #
+# ----------------------------------------------------------------- #
+
+def sgdm_init(params, momentum=0.9):
+    return {"mom": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(params, grads, state, lr, momentum=0.9):
+    new_mom = jax.tree.map(lambda mo, g: momentum * mo + g, state["mom"],
+                           grads)
+    new_params = jax.tree.map(lambda p, mo: p - lr * mo, params, new_mom)
+    return new_params, {"mom": new_mom, "step": state["step"] + 1}

@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for slow interconnects — the commodity-cluster setting of the
+paper's §5.4, applied to the LM stack's DP all-reduce).
+
+int8 block quantization: each block of 256 values shares one f32 scale
+(absmax).  Error feedback [Seide et al. 2014; Karimireddy et al. 2019]
+accumulates the quantization residual locally and re-injects it next
+step, which restores convergence to the uncompressed rate.  4x wire-byte
+reduction on the gradient all-reduce.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def compress_int8(x):
+    """x: any float array -> (int8 codes (N/BLOCK, BLOCK), scales, meta)."""
+    flat, pad = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return codes, scale, (x.shape, pad)
+
+
+def decompress_int8(codes, scale, meta, dtype=jnp.float32):
+    shape, pad = meta
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: jax.Array
+
+
+def ef_init(params):
+    return jax.tree.map(
+        lambda p: ErrorFeedbackState(jnp.zeros_like(p, jnp.float32)),
+        params, is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+def ef_compress_update(grad, ef: ErrorFeedbackState):
+    """Compress (grad + residual); return (quantized grad, new residual).
+
+    The caller all-reduces the *quantized* gradient; the residual stays
+    local.  Property: ||residual|| stays bounded and the compressed SGD
+    trajectory tracks the exact one (tested in tests/test_optim.py).
+    """
+    g = grad.astype(jnp.float32) + ef.residual
+    codes, scale, meta = compress_int8(g)
+    g_hat = decompress_int8(codes, scale, meta)
+    return g_hat.astype(grad.dtype), ErrorFeedbackState(g - g_hat)

@@ -1,0 +1,13 @@
+"""LR schedules for the LM stack (the MC engine uses core.stepsize)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, base_lr=3e-4, warmup=100, total=1000,
+                  min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)

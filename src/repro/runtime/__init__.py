@@ -1,0 +1,5 @@
+from .elastic import ElasticPlan, replan_on_failure, FailureEvent
+from .straggler import StragglerMonitor
+
+__all__ = ["ElasticPlan", "replan_on_failure", "FailureEvent",
+           "StragglerMonitor"]

@@ -1,0 +1,51 @@
+"""Straggler detection & mitigation policy.
+
+The paper's §3.3 mitigation is *routing*: send nomadic items to short
+queues.  At SPMD scale the equivalent knobs are (a) nnz-balanced block
+construction (static, core.partition) and (b) detecting persistently slow
+hosts and ejecting them (turning a straggler into a failure handled by
+runtime.elastic — the standard play at 1000+ nodes, where a 5%-slow host
+taxes every bulk-synchronous step).
+
+``StragglerMonitor`` implements the detection policy on per-step,
+per-worker timing streams with an EWMA baseline; the discrete-event
+simulator provides the timing streams in tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_workers: int
+    threshold: float = 1.5      # flag when worker EWMA > threshold x median
+    decay: float = 0.9
+    min_steps: int = 5
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_workers)
+        self.steps = 0
+
+    def update(self, step_times: np.ndarray) -> List[int]:
+        """Feed per-worker durations for one step; returns workers to
+        eject (persistently slow)."""
+        if self.steps == 0:
+            self.ewma = step_times.astype(float).copy()
+        else:
+            self.ewma = self.decay * self.ewma + \
+                (1 - self.decay) * step_times
+        self.steps += 1
+        if self.steps < self.min_steps:
+            return []
+        med = np.median(self.ewma)
+        return [int(i) for i in
+                np.flatnonzero(self.ewma > self.threshold * med)]
+
+    def utilization_penalty(self, step_times: np.ndarray) -> float:
+        """Fraction of compute wasted at a bulk barrier this step (the
+        curse of the last reducer, quantified)."""
+        return float(1.0 - step_times.mean() / max(step_times.max(), 1e-12))

@@ -1,0 +1,20 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benchmarks must
+# see the real (single) device; only launch/dryrun.py and the subprocess
+# tests in test_distributed.py force a placeholder device count.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_mc_problem():
+    """Small low-rank matrix-completion problem shared across tests."""
+    from repro.data.synthetic import synthetic_ratings, train_test_split
+    rows, cols, vals, Wt, Ht = synthetic_ratings(
+        120, 60, 3000, k=8, seed=0, noise=0.02)
+    train, test = train_test_split(rows, cols, vals, test_frac=0.15, seed=1)
+    return dict(m=120, n=60, k=8, train=train, test=test)

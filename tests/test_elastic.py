@@ -1,0 +1,74 @@
+"""Fault tolerance: elastic re-planning, straggler policy, failure-path
+convergence of the NOMAD engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.elastic import initial_plan, replan_on_failure
+from repro.runtime.straggler import StragglerMonitor
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 12),
+       n_fail=st.integers(1, 3))
+def test_replan_covers_everything(seed, p, n_fail):
+    rng = np.random.default_rng(seed)
+    n_fail = min(n_fail, p - 1)
+    m, nb = 50, 16
+    row_owner = rng.integers(0, p, m).astype(np.int64)
+    plan = initial_plan(p, row_owner, nb, seed=seed)
+    failed = rng.choice(p, size=n_fail, replace=False)
+    weights = rng.integers(1, 20, m).astype(float)
+    new = replan_on_failure(plan, failed, row_weights=weights, seed=seed)
+    # no row or block is owned by a dead worker
+    assert not np.any(~new.alive[new.row_owner])
+    assert not np.any(~new.alive[new.block_owner])
+    # surviving workers' assignments are untouched
+    untouched = new.alive[plan.row_owner]
+    assert np.array_equal(new.row_owner[untouched],
+                          plan.row_owner[untouched])
+
+
+def test_replan_balances_moved_rows():
+    p, m = 4, 1000
+    rng = np.random.default_rng(0)
+    row_owner = np.zeros(m, dtype=np.int64)  # everything on worker 0
+    weights = rng.integers(1, 10, m).astype(float)
+    plan = initial_plan(p, row_owner, 8)
+    new = replan_on_failure(plan, [0], row_weights=weights)
+    loads = np.bincount(new.row_owner, weights=weights, minlength=p)
+    live_loads = loads[1:]
+    assert live_loads.max() < 1.3 * live_loads.mean() + weights.max()
+
+
+def test_straggler_monitor_flags_slow_worker():
+    mon = StragglerMonitor(n_workers=8, threshold=1.4, min_steps=3)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for step in range(20):
+        t = np.abs(1.0 + 0.05 * rng.normal(size=8))
+        t[5] *= 2.5  # persistent straggler
+        flagged = mon.update(t)
+    assert flagged == [5]
+    pen = mon.utilization_penalty(t)
+    assert 0.3 < pen < 0.8  # barrier waste caused by the straggler
+
+
+def test_nomad_converges_through_failure(tiny_mc_problem):
+    """End-to-end: a mid-run worker failure must not prevent convergence
+    (nomadic items re-route, rows re-assign)."""
+    from repro.core import objective
+    from repro.core.async_sim import NomadSimulator, SimConfig
+    from repro.core.stepsize import PowerSchedule
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], pr["k"])
+    cfg = SimConfig(p=4, k=pr["k"], lam=0.01,
+                    schedule=PowerSchedule(alpha=0.08, beta=0.02),
+                    epochs=12.0, seed=0, failures=((500.0, 1),))
+    sim = NomadSimulator(cfg, pr["m"], pr["n"], rows, cols, vals, W0, H0,
+                         test=pr["test"])
+    res = sim.run()
+    rmse0 = objective.rmse_np(W0, H0, *pr["test"])
+    rmse1 = objective.rmse_np(res.W, res.H, *pr["test"])
+    assert rmse1 < 0.7 * rmse0, (rmse0, rmse1)

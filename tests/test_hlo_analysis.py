@@ -1,0 +1,77 @@
+"""Unit tests for the optimized-HLO collective parser used by the
+roofline analysis."""
+import textwrap
+
+from repro.launch.hlo_analysis import (analyze_collectives,
+                                       collective_summary, _shape_bytes,
+                                       _trip_count)
+
+FAKE_HLO = textwrap.dedent("""
+    HloModule jit_step, entry_computation_layout={...}
+
+    %wide.body (param: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+      %p = (s32[], f32[16,64]) parameter(0)
+      %ag = f32[16,1024]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256]T(1,0), dimensions={1}, use_global_device_ids=true
+      %ar = f32[16,64]{1,0} all-reduce(%y), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+      ROOT %t = (s32[], f32[16,64]) tuple(...)
+    }
+
+    %wide.cond (param: (s32[], f32[16,64])) -> pred[] {
+      %p2 = (s32[], f32[16,64]) parameter(0)
+      %gte = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(64)
+      ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+    }
+
+    ENTRY %main.74_spmd (arg: f32[16,64]) -> f32[16,64] {
+      %arg = f32[16,64] parameter(0)
+      %rs = f32[4,64]{1,0} reduce-scatter(%arg), channel_id=3, replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+      %cp = f32[4,64]{1,0} collective-permute(%rs), channel_id=4, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+      %w = (s32[], f32[16,64]) while(%init), condition=%wide.cond, body=%wide.body
+      ROOT %out = f32[16,64] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,64]{1,0}") == [16 * 64 * 4]
+    assert _shape_bytes("bf16[2,3]") == [12]
+    assert _shape_bytes("(s32[], f32[8,8])") == [4, 256]
+
+
+def test_trip_count_parse():
+    lines = ["%gte = s32[] get-tuple-element(%p2), index=0",
+             "%c = s32[] constant(64)",
+             "ROOT %cmp = pred[] compare(%gte, %c), direction=LT"]
+    assert _trip_count(lines) == 64
+
+
+def test_collective_accounting_with_loop_multipliers():
+    ops, mult = analyze_collectives(FAKE_HLO, total_devices=256)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "collective-permute",
+                     "reduce-scatter"]
+    by = {o.kind: o for o in ops}
+    # ops inside the while body get the trip count 64
+    assert by["all-gather"].multiplier == 64
+    assert by["all-reduce"].multiplier == 64
+    assert by["reduce-scatter"].multiplier == 1
+    assert by["collective-permute"].multiplier == 1
+    # group sizes: iota format -> 16, explicit braces -> 4
+    assert by["all-gather"].group_size == 16
+    assert by["reduce-scatter"].group_size == 4
+    # wire formulas
+    ag = by["all-gather"]
+    assert abs(ag.wire_bytes - 16 * 1024 * 4 * 15 / 16) < 1
+    ar = by["all-reduce"]
+    assert abs(ar.wire_bytes - 2 * 16 * 64 * 4 * 15 / 16) < 1
+    rs = by["reduce-scatter"]
+    # plain RS result is the scattered shard; payload = shard * group
+    assert abs(rs.wire_bytes - (4 * 64 * 4 * 4) * 3 / 4) < 1
+    cp = by["collective-permute"]
+    assert cp.wire_bytes == 4 * 64 * 4
+
+    summary = collective_summary(FAKE_HLO, 256)
+    expect = (ag.wire_bytes + ar.wire_bytes) * 64 + rs.wire_bytes + \
+        cp.wire_bytes
+    assert abs(summary["wire_bytes_per_device"] - expect) < 1

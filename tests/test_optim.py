@@ -1,0 +1,133 @@
+"""Optimizer, schedule and gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw as A
+from repro.optim.grad_compress import (compress_int8, decompress_int8,
+                                       ef_compress_update,
+                                       ErrorFeedbackState)
+from repro.optim.schedule import cosine_warmup
+
+
+def _numpy_adamw(params, grads, m, v, step, cfg):
+    """Independent numpy reference."""
+    out_p, out_m, out_v = {}, {}, {}
+    gnorm = np.sqrt(sum(np.sum(np.square(g)) for g in grads.values()))
+    clip = min(1.0, cfg.grad_clip / max(gnorm, 1e-12))
+    bc1 = 1 - cfg.b1 ** step
+    bc2 = 1 - cfg.b2 ** step
+    for k in params:
+        g = grads[k] * clip
+        m_new = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        mh, vh = m_new / bc1, v_new / bc2
+        out_p[k] = params[k] - cfg.lr * (
+            mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * params[k])
+        out_m[k], out_v[k] = m_new, v_new
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = A.AdamWConfig(lr=1e-2, weight_decay=0.01, master_dtype="float32")
+    rng = np.random.default_rng(0)
+    params = {k: jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+              for k in "ab"}
+    state = A.adamw_init(params, cfg)
+    np_p = {k: np.asarray(v) for k, v in params.items()}
+    np_m = {k: np.zeros_like(v) for k, v in np_p.items()}
+    np_v = {k: np.zeros_like(v) for k, v in np_p.items()}
+    for step in range(1, 4):
+        grads = {k: jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)
+                 for k in "ab"}
+        params, state, _ = A.adamw_update(params, grads, state, cfg)
+        np_g = {k: np.asarray(v) for k, v in grads.items()}
+        np_p, np_m, np_v = _numpy_adamw(np_p, np_g, np_m, np_v, step, cfg)
+        for k in "ab":
+            np.testing.assert_allclose(params[k], np_p[k], rtol=1e-5,
+                                       atol=1e-6)
+
+
+def test_adamw_bf16_states_track_f32():
+    """bf16 m/v states (the memory-term optimization) must track the f32
+    trajectory closely on a quadratic."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
+                         jnp.float32)
+
+    def run(state_dtype):
+        cfg = A.AdamWConfig(lr=0.05, weight_decay=0.0,
+                            state_dtype=state_dtype, grad_clip=0.0)
+        params = {"w": jnp.zeros((16,), jnp.float32)}
+        state = A.adamw_init(params, cfg)
+        for _ in range(60):
+            grads = {"w": params["w"] - target}
+            params, state, _ = A.adamw_update(params, grads, state, cfg)
+        return params["w"]
+
+    w32 = run("float32")
+    w16 = run("bfloat16")
+    assert float(jnp.max(jnp.abs(w32 - target))) < 0.05
+    assert float(jnp.max(jnp.abs(w16 - w32))) < 0.05
+
+
+def test_cosine_warmup_shape():
+    lrs = [float(cosine_warmup(s, base_lr=1.0, warmup=10, total=100))
+           for s in range(100)]
+    assert lrs[0] < lrs[5] < lrs[9]           # warmup ramps
+    assert abs(lrs[10] - 1.0) < 0.05          # peak ~ base
+    assert lrs[50] > lrs[90]                  # decays
+    assert lrs[99] >= 0.1 - 1e-6              # floor
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 2000))
+def test_int8_roundtrip_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * 10, jnp.float32)
+    codes, scale, meta = compress_int8(x)
+    y = decompress_int8(codes, scale, meta)
+    assert y.shape == x.shape
+    # absmax block quantization: error <= scale/2 per block
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % 256)).reshape(-1, 256))
+    bound = np.abs(blocks).max(axis=1) / 127.0
+    err = np.abs(np.asarray(y - x))
+    err_blocks = np.pad(err, (0, (-n) % 256)).reshape(-1, 256)
+    assert np.all(err_blocks <= bound[:, None] * 0.5001 + 1e-8)
+
+
+def test_error_feedback_recovers_exact_sgd():
+    """With error feedback, compressed-SGD tracks exact SGD on a
+    quadratic; without it, the bias accumulates."""
+    rng = np.random.default_rng(1)
+    target = jnp.asarray(rng.normal(size=(512,)) * 3, jnp.float32)
+
+    def run(ef: bool):
+        w = jnp.zeros((512,), jnp.float32)
+        st_ = ErrorFeedbackState(jnp.zeros((512,), jnp.float32))
+        for _ in range(150):
+            g = w - target
+            if ef:
+                g_hat, st_ = ef_compress_update(g, st_)
+            else:
+                codes, scale, meta = compress_int8(g)
+                g_hat = decompress_int8(codes, scale, meta)
+            w = w - 0.05 * g_hat
+        return w
+
+    w_exact = target * (1 - 0.95 ** 150)  # analytic exact-SGD trajectory
+    err_ef = float(jnp.max(jnp.abs(run(True) - target)))
+    assert err_ef < 0.02, err_ef
+
+
+def test_ef_residual_bounded():
+    rng = np.random.default_rng(2)
+    st_ = ErrorFeedbackState(jnp.zeros((256,), jnp.float32))
+    norms = []
+    for i in range(50):
+        g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+        _, st_ = ef_compress_update(g, st_)
+        norms.append(float(jnp.linalg.norm(st_.residual)))
+    # residual stays bounded (contraction), never grows without bound
+    assert max(norms[25:]) < 2 * max(norms[:25]) + 1.0

@@ -1,0 +1,87 @@
+"""Partitioning/property tests for the block packer (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as P
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(1, 8),
+       m=st.integers(4, 60), n=st.integers(4, 40),
+       nnz=st.integers(1, 400), balanced=st.booleans())
+def test_pack_is_exact_partition(seed, p, m, n, nnz, balanced):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    vals = rng.normal(size=nnz)
+    br = P.pack(rows, cols, vals, m, n, p, balanced=balanced)
+
+    # every rating appears exactly once across all cells
+    ids = np.sort(br.gid[br.gid >= 0])
+    assert np.array_equal(ids, np.arange(nnz))
+    # mask agrees with gid
+    assert np.array_equal(br.mask, br.gid >= 0)
+    # cell (q, s) holds ratings whose row-owner is q and col-block is
+    # (q - s) mod p
+    for q in range(br.p):
+        for s in range(br.p):
+            g = br.gid[q, s][br.mask[q, s]]
+            if len(g):
+                assert np.all(br.row_owner[rows[g]] == q)
+                assert np.all(br.col_block[cols[g]] == (q - s) % p)
+    # local indices round-trip to global
+    for q in range(br.p):
+        for s in range(br.p):
+            g = br.gid[q, s][br.mask[q, s]]
+            got_rows = br.row_of[q][br.rows[q, s][br.mask[q, s]]]
+            assert np.array_equal(got_rows, rows[g])
+            b = (q - s) % p
+            got_cols = br.col_of[b][br.cols[q, s][br.mask[q, s]]]
+            assert np.array_equal(got_cols, cols[g])
+    # ring order is a permutation
+    order = br.ring_order()
+    assert np.array_equal(np.sort(order), np.arange(nnz))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(1, 16),
+       count=st.integers(1, 300))
+def test_balanced_assign_quality(seed, p, count):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 100, count)
+    assign = P.balanced_assign(w, p)
+    assert assign.shape == (count,)
+    assert assign.min() >= 0 and assign.max() < p
+    loads = np.bincount(assign, weights=w, minlength=p)
+    # LPT guarantee: max load <= (4/3) OPT + max item; loose but real check
+    opt_lb = max(w.sum() / p, w.max() if count else 0)
+    assert loads.max() <= 4 / 3 * opt_lb + w.max() + 1
+
+
+def test_shard_unshard_roundtrip():
+    rng = np.random.default_rng(0)
+    m, n, k, p = 37, 23, 5, 4
+    rows = rng.integers(0, m, 200)
+    cols = rng.integers(0, n, 200)
+    br = P.pack(rows, cols, rng.normal(size=200), m, n, p)
+    W = rng.normal(size=(m, k)).astype(np.float32)
+    H = rng.normal(size=(n, k)).astype(np.float32)
+    Ws, Hs = P.shard_factors(W, H, br)
+    W2, H2 = P.unshard_factors(Ws, Hs, br)
+    np.testing.assert_array_equal(W, W2)
+    np.testing.assert_array_equal(H, H2)
+
+
+def test_nnz_balance_of_cells():
+    """Balanced packing should equalize per-worker nnz to within the
+    largest row/col weight (the paper's §3.3 static equivalent)."""
+    rng = np.random.default_rng(1)
+    m, n, p = 200, 100, 8
+    # power-law rows
+    deg = np.maximum(1, (rng.pareto(1.5, m) * 10).astype(int))
+    rows = np.repeat(np.arange(m), deg)
+    cols = rng.integers(0, n, len(rows))
+    br = P.pack(rows, cols, np.ones(len(rows)), m, n, p, balanced=True)
+    per_worker = br.nnz_cell.sum(axis=1)
+    assert per_worker.max() - per_worker.min() <= deg.max() + p
