@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.partition import pack_cell_waves
 from repro.kernels import ref
 from .common import timed
 
@@ -15,13 +16,17 @@ def kernel_rows() -> list:
     rng = np.random.default_rng(0)
     out = []
 
-    # NOMAD block SGD: XLA oracle throughput (updates/sec on CPU)
+    # NOMAD block SGD: sequential oracle vs conflict-free wave path
+    # (updates/sec on CPU at the seed bench shape)
     m_t, n_t, k, nnz = 512, 256, 100, 8192
     W = jnp.asarray(rng.normal(size=(m_t, k)), jnp.float32)
     H = jnp.asarray(rng.normal(size=(n_t, k)), jnp.float32)
-    rows = jnp.asarray(rng.integers(0, m_t, nnz), jnp.int32)
-    cols = jnp.asarray(rng.integers(0, n_t, nnz), jnp.int32)
-    vals = jnp.asarray(rng.normal(size=nnz), jnp.float32)
+    rows_np = rng.integers(0, m_t, nnz)
+    cols_np = rng.integers(0, n_t, nnz)
+    vals_np = rng.normal(size=nnz).astype(np.float32)
+    rows = jnp.asarray(rows_np, jnp.int32)
+    cols = jnp.asarray(cols_np, jnp.int32)
+    vals = jnp.asarray(vals_np)
     mask = jnp.ones(nnz, bool)
     fn = jax.jit(ref.block_sgd_ref)
     fn(W, H, rows, cols, vals, mask, 0.01, 0.05)[0].block_until_ready()
@@ -29,6 +34,21 @@ def kernel_rows() -> list:
                              0.05)[0].block_until_ready(), repeat=3)
     out.append(("kernel/nomad_sgd_xla", us / nnz,
                 f"updates_per_s={nnz / (us / 1e6):.0f}"))
+
+    # wave-vectorized path over the same ratings (same serial ordering,
+    # ~wave_width updates per step — DESIGN.md §3)
+    pre = np.lexsort((rows_np, cols_np))
+    _, wr, wc, wv, wm, _ = pack_cell_waves(rows_np[pre], cols_np[pre],
+                                           vals_np[pre])
+    wrj, wcj, wvj, wmj = (jnp.asarray(a) for a in (wr, wc, wv, wm))
+    fw = jax.jit(ref.block_sgd_waves)
+    fw(W, H, wrj, wcj, wvj, wmj, 0.01, 0.05)[0].block_until_ready()
+    _, us_w = timed(lambda: fw(W, H, wrj, wcj, wvj, wmj, 0.01,
+                               0.05)[0].block_until_ready(), repeat=10)
+    out.append(("kernel/nomad_sgd_wave", us_w / nnz,
+                f"updates_per_s={nnz / (us_w / 1e6):.0f}"))
+    out.append(("kernel/nomad_sgd_wave_speedup", us / us_w,
+                f"n_waves={wr.shape[0]} wave_width={wr.shape[1]}"))
 
     # flash attention XLA path
     from repro.models.flash_xla import flash_attention_xla

@@ -1,16 +1,42 @@
 """Benchmark harness: one function per paper table/figure plus kernel
 micro-benchmarks and the roofline table (from dry-run artifacts when
-present).  Prints ``name,us_per_call,derived`` CSV.
+present).  Prints ``name,us_per_call,derived`` CSV; the kernel suite is
+additionally recorded to ``BENCH_kernels.json`` at the repo root so the
+perf trajectory survives across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
+
+
+def _write_kernel_record(rows) -> None:
+    """Persist the kernel suite as {name: {us_per_call, **derived}}."""
+    record = {}
+    for name, us, derived in rows:
+        # speedup rows carry a dimensionless ratio, not a latency
+        key = "speedup" if name.endswith("_speedup") else "us_per_call"
+        entry = {key: round(float(us), 3)}
+        for kv in str(derived).split():
+            if "=" in kv:
+                key, val = kv.split("=", 1)
+                try:
+                    entry[key] = float(val)
+                except ValueError:
+                    entry[key] = val
+        record[name] = entry
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
@@ -38,14 +64,22 @@ def main() -> None:
     ]
 
     print("name,us_per_call,derived")
+    failed = []
     for name, fn in suites:
         if only and not any(name.startswith(o) for o in only):
             continue
         try:
-            for row_name, us, derived in fn():
+            rows = fn()
+            for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+            if name == "kernel":
+                _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            failed.append(name)
+    if failed:
+        # nonzero exit so CI can't go green on a stale benchmark record
+        sys.exit(f"benchmark suites failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import nomad, objective, partition
 from repro.core.stepsize import PowerSchedule
 from repro.distributed import ring
@@ -33,7 +34,7 @@ print(f"devices: {jax.device_count()}, mesh: {mesh}")
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
 w = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
-ag = jax.jit(jax.shard_map(
+ag = jax.jit(compat.shard_map(
     lambda xb, wl: ring.ring_ag_matmul(xb, wl, "workers"), mesh=mesh,
     in_specs=(P("workers", None), P(None, "workers")),
     out_specs=P(None, "workers")))

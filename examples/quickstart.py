@@ -23,6 +23,7 @@ W, H, trace = nomad.fit(
     schedule=PowerSchedule(alpha=0.1, beta=0.01),   # eq. (11)
     epochs=15,
     test=test,
+    impl="wave",                           # conflict-free vectorized path
     verbose=True,
 )
 print(f"final test RMSE: {trace[-1][1]:.4f}")

@@ -35,6 +35,10 @@ def main():
     ap.add_argument("--beta", type=float, default=0.05)
     ap.add_argument("--ckpt-dir", default="/tmp/nomad_mc_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--impl", default="wave",
+                    choices=["xla", "pallas", "auto", "wave", "wave_pallas"],
+                    help="block-update kernel (wave = conflict-free "
+                         "vectorized path, DESIGN.md §3)")
     args = ap.parse_args()
 
     # scale users linearly and keep Netflix's ~37 ratings/user so the
@@ -48,9 +52,10 @@ def main():
     print(f"dataset: m={m} n={n} nnz={len(train[0])} "
           f"(Netflix x {args.scale:g})")
 
-    br = partition.pack(*train, m, n, args.p, balanced=True)
+    br = partition.pack(*train, m, n, args.p, balanced=True,
+                        waves=args.impl in ("wave", "wave_pallas"))
     eng = nomad.NomadRingEngine(
-        br=br, k=args.k, lam=args.lam,
+        br=br, k=args.k, lam=args.lam, impl=args.impl,
         schedule=PowerSchedule(alpha=args.alpha, beta=args.beta))
     W0, H0 = objective.init_factors_np(0, m, n, args.k)
     eng.init_factors(W0.astype(np.float32), H0.astype(np.float32))

@@ -1,0 +1,55 @@
+"""Version compatibility shims for the supported jax range.
+
+The repo targets the jax_pallas toolchain image; CI and laptops may run
+an older 0.4.x wheel where ``shard_map`` still lives under
+``jax.experimental`` and meshes have no explicit ``AxisType``.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.5
+    _shard_map = jax.shard_map
+    _NEW_SHARD_MAP = True
+except AttributeError:                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_SHARD_MAP = False
+
+
+def shard_map(*args, **kwargs):
+    """jax.shard_map with the modern kwargs on every supported version
+    (0.4.x named the varying-manual-axes check ``check_rep``)."""
+    if not _NEW_SHARD_MAP and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict (0.4.x wrapped it in a
+    one-element list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def pvary(x, axis_name):
+    """jax.lax.pvary, or identity on 0.4.x where replication tracking has
+    no explicit cast (numerically pvary is the identity)."""
+    try:
+        return jax.lax.pvary(x, axis_name)
+    except AttributeError:
+        return x
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis (jax.lax.axis_size is >= 0.6).
+
+    The fallback ``psum(1, axis)`` is the classic pmap-era idiom: named
+    axis sizes are static, so it constant-folds to a Python int at trace
+    time on every supported version.
+    """
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return jax.lax.psum(1, axis_name)

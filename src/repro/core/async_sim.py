@@ -254,7 +254,7 @@ def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
     p, k = cfg.p, cfg.k
     rows = np.asarray(rows); cols = np.asarray(cols)
     vals = np.asarray(vals, dtype=np.float64)
-    br = pack(rows, cols, vals, m, n, p, balanced=True)
+    br = pack(rows, cols, vals, m, n, p, balanced=True, waves=False)
     W = np.array(W0, np.float64, copy=True)
     H = np.array(H0, np.float64, copy=True)
     speed = np.ones(p) if cfg.speed is None else np.asarray(cfg.speed)

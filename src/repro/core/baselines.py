@@ -50,7 +50,7 @@ def dsgd(rows, cols, vals, m, n, k, p, *, lam=0.05, epochs=10,
     difference (bulk barrier vs. asynchronous circulation) only manifests
     in wall-clock behaviour, which the discrete-event simulator measures."""
     schedule = schedule or PowerSchedule()
-    br = part.pack(rows, cols, vals, m, n, p, balanced=True)
+    br = part.pack(rows, cols, vals, m, n, p, balanced=True, waves=False)
     if W0 is None:
         W0, H0 = init_factors(jax.random.key(seed), m, n, k)
     Ws, Hs = part.shard_factors(np.asarray(W0), np.asarray(H0), br)

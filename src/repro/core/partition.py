@@ -10,14 +10,24 @@ construction of the *item blocks* is the static SPMD equivalent of the
 paper's dynamic queue-length load balancing (§3.3): every (worker, block)
 cell carries approximately equal work.
 
-Within a cell, ratings are sorted by item column (then by row), matching
-Algorithm 1 which processes, for each owned item ``j``, all local ratings
-in ``\\bar\\Omega_j^{(q)}`` consecutively.
+Within a cell, ratings are stored in *wave-major* order (see DESIGN.md §3):
+a greedy coloring groups the cell's ratings into waves — maximal batches in
+which no two ratings share a row or a column — and the sequential arrays
+list wave 0's ratings first, then wave 1's, and so on.  Because ratings
+inside a wave touch pairwise-disjoint factor vectors, executing a wave as
+one vectorized batch is exactly equivalent to executing it sequentially,
+so the wave-vectorized kernels and the sequential oracle realize the *same*
+serial ordering (``ring_order``).  This is the CYCLADES-style conflict-free
+batching (Pan et al., 2016) applied to NOMAD's per-cell update stream.
+
+With ``sub_blocks > 1`` the cell's ratings are additionally pre-partitioned
+by item sub-block (sub-block-major, then wave-major within a sub-block) so
+the SPMD engine's pipelined permutes touch each rating exactly once.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +55,106 @@ def contiguous_assign(count: int, p: int) -> np.ndarray:
     sizes = np.full(p, count // p, dtype=np.int64)
     sizes[: count % p] += 1
     return np.repeat(np.arange(p, dtype=np.int32), sizes)
+
+
+def sub_block_starts(n_local: int, sub_blocks: int) -> np.ndarray:
+    """Col boundaries of the item sub-blocks within one H block —
+    the single source of truth shared by :func:`pack`, the SPMD engine
+    and the dry-run shape model."""
+    sb = max(1, n_local // sub_blocks)
+    starts = np.minimum(np.arange(sub_blocks + 1) * sb, n_local)
+    starts[-1] = n_local
+    return starts
+
+
+def greedy_wave_color(rloc: np.ndarray, cloc: np.ndarray) -> np.ndarray:
+    """Assign each rating a *wave* index such that no two ratings in the
+    same wave share a row or a column.
+
+    Ratings are processed in the given order; rating ``t`` is placed in
+    wave ``max(next_wave[row_t], next_wave[col_t])``, which (a) yields
+    conflict-free waves and (b) preserves the relative order of any two
+    *conflicting* ratings — the property the serial-equivalence argument
+    needs (DESIGN.md §3).  The number of waves equals the length of the
+    longest alternating row/col conflict chain, which is at most
+    ``max_row_degree + max_col_degree - 1`` and typically close to
+    ``max(max_row_degree, max_col_degree)``.
+
+    Cost note: this is an O(nnz) pure-Python loop (the recurrence is
+    inherently sequential), ~1 us/rating — negligible below ~10M ratings
+    but minutes of one-time pack cost at full Netflix scale.  For short
+    runs on huge data either pack with ``waves=False`` (sequential
+    impls) or amortize the pack across many epochs / a saved packing.
+    """
+    n = len(rloc)
+    wave = np.empty(n, dtype=np.int64)
+    if n == 0:
+        return wave
+    next_r = np.zeros(int(rloc.max()) + 1, dtype=np.int64)
+    next_c = np.zeros(int(cloc.max()) + 1, dtype=np.int64)
+    for t in range(n):
+        i = rloc[t]
+        j = cloc[t]
+        w = next_r[i] if next_r[i] > next_c[j] else next_c[j]
+        wave[t] = w
+        next_r[i] = w + 1
+        next_c[j] = w + 1
+    return wave
+
+
+def pack_cell_waves(
+    rloc: np.ndarray,
+    cloc: np.ndarray,
+    vals: np.ndarray,
+    *,
+    wave_width: Optional[int] = None,
+    n_waves: Optional[int] = None,
+    width_multiple: int = 8,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+           np.ndarray]:
+    """Wave-pack one cell's ratings into a padded dense layout.
+
+    Returns ``(order, wrows, wcols, wvals, wmask, wgid)`` where ``order``
+    is the wave-major permutation of the input ratings (the cell's serial
+    ordering) and the ``w*`` arrays have shape ``(n_waves, wave_width)``.
+    ``wgid[w, t]`` indexes into the *input* arrays (-1 padding).  Within a
+    wave no row or column repeats, so the wave may be applied as one
+    vectorized batch with results identical to sequential execution.
+    """
+    rloc = np.asarray(rloc, dtype=np.int64)
+    cloc = np.asarray(cloc, dtype=np.int64)
+    wave = greedy_wave_color(rloc, cloc)
+    nw_real = int(wave.max()) + 1 if len(wave) else 1
+    counts = np.bincount(wave, minlength=nw_real)
+    width_real = int(counts.max()) if len(wave) else 1
+    if wave_width is None:
+        wave_width = -(-width_real // width_multiple) * width_multiple
+    if width_real > wave_width:
+        raise ValueError(
+            f"wave_width={wave_width} < largest wave ({width_real})")
+    if n_waves is None:
+        n_waves = nw_real
+    if nw_real > n_waves:
+        raise ValueError(f"n_waves={n_waves} < required waves ({nw_real})")
+
+    order = np.argsort(wave, kind="stable")
+    # slot of each rating inside its wave
+    slot = np.empty(len(wave), dtype=np.int64)
+    off = np.concatenate([[0], np.cumsum(counts)])
+    for w in range(nw_real):
+        slot[order[off[w]: off[w + 1]]] = np.arange(counts[w])
+
+    wrows = np.zeros((n_waves, wave_width), dtype=np.int32)
+    wcols = np.zeros((n_waves, wave_width), dtype=np.int32)
+    wvals = np.zeros((n_waves, wave_width), dtype=np.float32)
+    wmask = np.zeros((n_waves, wave_width), dtype=bool)
+    wgid = np.full((n_waves, wave_width), -1, dtype=np.int64)
+    wrows[wave, slot] = rloc
+    wcols[wave, slot] = cloc
+    wvals[wave, slot] = np.asarray(vals, dtype=np.float32)
+    wmask[wave, slot] = True
+    wgid[wave, slot] = np.arange(len(wave))
+    return order, wrows, wcols, wvals, wmask, wgid
 
 
 @dataclasses.dataclass
@@ -95,6 +205,32 @@ class BlockedRatings:
     # filled by pack(); (p, p, max_nnz) global rating ids, -1 pad
     gid: np.ndarray = None
 
+    # --- wave layout (DESIGN.md §3); filled by pack(..., waves=True) ---
+    # Cell (q, s)'s ratings regrouped into conflict-free waves: within
+    # wave_rows[q, s, w] no local row index repeats, likewise columns.
+    # The sequential arrays above are stored wave-major, so executing the
+    # waves in order is the SAME serial linearization as rows/cols/....
+    n_waves: int = 0          # padded wave count per cell
+    wave_width: int = 0       # padded ratings per wave
+    wave_rows: np.ndarray = None   # (p, p, n_waves, wave_width) int32
+    wave_cols: np.ndarray = None   # (p, p, n_waves, wave_width) int32
+    wave_vals: np.ndarray = None   # (p, p, n_waves, wave_width) float32
+    wave_mask: np.ndarray = None   # (p, p, n_waves, wave_width) bool
+    wave_gid: np.ndarray = None    # (p, p, n_waves, wave_width) int64, -1 pad
+    wave_cnt: np.ndarray = None    # (p, p, n_waves) real wave sizes
+
+    # --- sub-block pre-partition (SPMD pipelining); sub_blocks > 1 only ---
+    # Cell ratings split by item sub-block with cols already localized to
+    # the sub-block (c - sub_starts[s]); replaces the seed's masked
+    # full-list re-scan per sub-block (which multiplied epoch cost).
+    sub_blocks: int = 1
+    sub_starts: np.ndarray = None  # (sub_blocks + 1,) col boundaries
+    sub_rows: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) int32
+    sub_cols: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) int32
+    sub_vals: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) float32
+    sub_mask: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) bool
+    sub_nnz: np.ndarray = None     # (p, p, sub_blocks) real counts
+
 
 def pack(
     rows: np.ndarray,
@@ -104,8 +240,19 @@ def pack(
     n: int,
     p: int,
     balanced: bool = True,
+    waves: bool = True,
+    wave_width: Optional[int] = None,
+    sub_blocks: int = 1,
 ) -> BlockedRatings:
-    """Pack COO ratings into the ring-ordered block structure."""
+    """Pack COO ratings into the ring-ordered block structure.
+
+    ``waves=True`` additionally emits the conflict-free wave layout (and
+    stores the sequential arrays wave-major so both executions share one
+    serial ordering).  ``sub_blocks > 1`` pre-partitions every cell by
+    item sub-block for the SPMD pipelined engine; the cell-level order
+    becomes sub-block-major with waves colored per sub-block, which is
+    exactly the order the pipelined engine executes.
+    """
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
     vals_f = np.asarray(vals, dtype=np.float32)
@@ -144,6 +291,67 @@ def pack(
     counts = np.bincount(cell_sorted, minlength=p * p).reshape(p, p)
     max_nnz = max(1, int(counts.max()))
 
+    if sub_blocks < 1:
+        raise ValueError("sub_blocks must be >= 1")
+    if sub_blocks > 1 and n_local // sub_blocks == 0:
+        raise ValueError(f"sub_blocks={sub_blocks} > n_local={n_local}")
+    sub_starts = sub_block_starts(n_local, sub_blocks)
+    sb = max(1, n_local // sub_blocks)
+
+    # ---- pass 1: per cell, order ratings (sub-block-major, wave-major) --
+    # cell_info[q][s] = (ids, rloc, cloc, wave, sid) in final serial order
+    starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
+    cell_info = [[None] * p for _ in range(p)]
+    n_waves = 1
+    max_wave_sz = 1
+    sub_max = 1
+    for q in range(p):
+        for b in range(p):
+            lo, hi = starts[q * p + b], starts[q * p + b + 1]
+            ids = order[lo:hi]
+            s = (q - b) % p  # ring step at which worker q owns block b
+            rloc = row_local[rows[ids]]
+            cloc = col_local[cols[ids]]
+            sid = np.minimum(cloc // sb, sub_blocks - 1)
+            # sub-block-major, preserving (col, row) order within
+            sub_sort = np.argsort(sid, kind="stable")
+            ids, rloc, cloc, sid = (a[sub_sort] for a in
+                                    (ids, rloc, cloc, sid))
+            if len(ids):
+                sub_max = max(sub_max, int(np.bincount(
+                    sid, minlength=sub_blocks).max()))
+            if waves:
+                # wave-color each sub-block independently; offset so wave
+                # indices are globally ordered sub-block-major
+                wave = np.zeros(len(ids), dtype=np.int64)
+                off = 0
+                for sbi in range(sub_blocks):
+                    seg = np.flatnonzero(sid == sbi)
+                    if len(seg) == 0:
+                        continue
+                    wseg = greedy_wave_color(rloc[seg], cloc[seg])
+                    wave[seg] = wseg + off
+                    off += int(wseg.max()) + 1
+                # serial order inside the cell = wave-major (stable)
+                worder = np.argsort(wave, kind="stable")
+                ids, rloc, cloc, sid, wave = (a[worder] for a in
+                                              (ids, rloc, cloc, sid, wave))
+                if len(ids):
+                    n_waves = max(n_waves, int(wave.max()) + 1)
+                    max_wave_sz = max(
+                        max_wave_sz,
+                        int(np.bincount(wave, minlength=1).max()))
+            else:
+                wave = None
+            cell_info[q][s] = (ids, rloc, cloc, wave, sid)
+
+    if wave_width is None:
+        wave_width = -(-max_wave_sz // 8) * 8   # multiple of 8 (VPU sublane)
+    elif wave_width < max_wave_sz:
+        raise ValueError(
+            f"wave_width={wave_width} < largest wave ({max_wave_sz})")
+
+    # ---- pass 2: fill the padded layouts ------------------------------
     R = np.zeros((p, p, max_nnz), dtype=np.int32)
     C = np.zeros((p, p, max_nnz), dtype=np.int32)
     V = np.zeros((p, p, max_nnz), dtype=np.float32)
@@ -151,19 +359,52 @@ def pack(
     G = np.full((p, p, max_nnz), -1, dtype=np.int64)
     nnz_cell = np.zeros((p, p), dtype=np.int64)
 
-    starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
+    if waves:
+        WR = np.zeros((p, p, n_waves, wave_width), dtype=np.int32)
+        WC = np.zeros((p, p, n_waves, wave_width), dtype=np.int32)
+        WV = np.zeros((p, p, n_waves, wave_width), dtype=np.float32)
+        WM = np.zeros((p, p, n_waves, wave_width), dtype=bool)
+        WG = np.full((p, p, n_waves, wave_width), -1, dtype=np.int64)
+        Wcnt = np.zeros((p, p, n_waves), dtype=np.int64)
+    if sub_blocks > 1:
+        SR = np.zeros((p, p, sub_blocks, sub_max), dtype=np.int32)
+        SC = np.zeros((p, p, sub_blocks, sub_max), dtype=np.int32)
+        SV = np.zeros((p, p, sub_blocks, sub_max), dtype=np.float32)
+        SM = np.zeros((p, p, sub_blocks, sub_max), dtype=bool)
+        Snnz = np.zeros((p, p, sub_blocks), dtype=np.int64)
+
     for q in range(p):
-        for b in range(p):
-            lo, hi = starts[q * p + b], starts[q * p + b + 1]
-            ids = order[lo:hi]
-            s = (q - b) % p  # ring step at which worker q owns block b
-            cnt = hi - lo
-            R[q, s, :cnt] = row_local[rows[ids]]
-            C[q, s, :cnt] = col_local[cols[ids]]
+        for s in range(p):
+            ids, rloc, cloc, wave, sid = cell_info[q][s]
+            cnt = len(ids)
+            R[q, s, :cnt] = rloc
+            C[q, s, :cnt] = cloc
             V[q, s, :cnt] = vals_f[ids]
             M[q, s, :cnt] = True
             G[q, s, :cnt] = ids
             nnz_cell[q, s] = cnt
+            if cnt == 0:
+                continue
+            if waves:
+                wcnt = np.bincount(wave, minlength=n_waves)
+                # ratings are wave-major, so slots are consecutive
+                woff = np.concatenate([[0], np.cumsum(wcnt)])
+                slot = np.arange(cnt) - woff[wave]
+                WR[q, s, wave, slot] = rloc
+                WC[q, s, wave, slot] = cloc
+                WV[q, s, wave, slot] = vals_f[ids]
+                WM[q, s, wave, slot] = True
+                WG[q, s, wave, slot] = ids
+                Wcnt[q, s] = wcnt
+            if sub_blocks > 1:
+                for sbi in range(sub_blocks):
+                    seg = np.flatnonzero(sid == sbi)
+                    scnt = len(seg)
+                    SR[q, s, sbi, :scnt] = rloc[seg]
+                    SC[q, s, sbi, :scnt] = cloc[seg] - sub_starts[sbi]
+                    SV[q, s, sbi, :scnt] = vals_f[ids[seg]]
+                    SM[q, s, sbi, :scnt] = True
+                    Snnz[q, s, sbi] = scnt
 
     br = BlockedRatings(
         p=p, m=m, n=n, m_local=m_local, n_local=n_local, max_nnz=max_nnz,
@@ -173,6 +414,17 @@ def pack(
         rows=R, cols=C, vals=V, mask=M, nnz_cell=nnz_cell,
     )
     br.gid = G
+    if waves:
+        br.n_waves = n_waves
+        br.wave_width = wave_width
+        br.wave_rows, br.wave_cols = WR, WC
+        br.wave_vals, br.wave_mask, br.wave_gid = WV, WM, WG
+        br.wave_cnt = Wcnt
+    br.sub_blocks = sub_blocks
+    br.sub_starts = sub_starts
+    if sub_blocks > 1:
+        br.sub_rows, br.sub_cols = SR, SC
+        br.sub_vals, br.sub_mask, br.sub_nnz = SV, SM, Snnz
     return br
 
 

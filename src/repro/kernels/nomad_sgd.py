@@ -14,9 +14,19 @@ explicit HBM->VMEM blocking:
     provably stay zero under the SGD update, so results equal the k<=128
     reference exactly.
 
-The update itself is strictly sequential inside the kernel (fori_loop with
-dynamic row/col gathers) — NOMAD's serializability is preserved bit-for-bit;
-parallelism comes from the block structure, never from racing updates.
+Two kernel variants share that blocking scheme:
+
+  * ``nomad_sgd_block`` — strictly sequential inside the kernel (fori_loop
+    with dynamic row/col gathers); NOMAD's serializability is preserved
+    bit-for-bit.
+  * ``nomad_sgd_waves_block`` — consumes the conflict-free *wave* layout
+    from ``partition.pack`` (DESIGN.md §3) and updates ``wave_width``
+    (row, col) pairs per step with vectorized gathers/scatters.  Within a
+    wave no row or column repeats, so the batch is exactly equivalent to
+    executing the wave sequentially — serializability is preserved while
+    the sequential chain shrinks from nnz to n_waves steps.
+
+Parallelism comes from the block/wave structure, never from racing updates.
 
 VMEM budget (f32): W tile 8192x128 = 4 MiB, H tile 4096x128 = 2 MiB,
 rating chunk 1024 x (2 int32 + f32 + mask) ~ 16 KiB — comfortably inside
@@ -132,4 +142,114 @@ def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
     return W_out[:, :k], H_out[:, :k]
 
 
+def _wave_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
+                 W_in_ref, H_in_ref, W_ref, H_ref):
+    """One grid step: apply a chunk of conflict-free waves in VMEM.
+
+    rows/cols/vals/mask refs hold (wave_chunk, wave_width) — each row is
+    one wave whose ratings touch pairwise-disjoint W rows and H rows, so
+    the whole wave is updated as a single vectorized gather ->
+    sgd_pair_batch -> scatter; only the scan *across* waves is sequential.
+    """
+    step = pl.program_id(0)
+    lr = scalars_ref[0]
+    lam = scalars_ref[1]
+
+    @pl.when(step == 0)
+    def _init():
+        W_ref[...] = W_in_ref[...]
+        H_ref[...] = H_in_ref[...]
+
+    n_waves = rows_ref.shape[0]
+    m_tile = W_ref.shape[0]
+    n_tile = H_ref.shape[0]
+
+    def body(t, carry):
+        W_all, H_all = carry
+        r = rows_ref[t, :]
+        c = cols_ref[t, :]
+        a = vals_ref[t, :]
+        m = mask_ref[t, :]
+        w = jnp.take(W_all, r, axis=0)          # (width, k) gather
+        h = jnp.take(H_all, c, axis=0)
+        w_new, h_new = _ref.sgd_pair_batch(w, h, a, lr, lam)
+        # padded lanes scatter out of bounds and are dropped; real lanes
+        # are unique within the wave so the scatter is race-free
+        W_all = W_all.at[jnp.where(m, r, m_tile)].set(w_new, mode="drop")
+        H_all = H_all.at[jnp.where(m, c, n_tile)].set(h_new, mode="drop")
+        return W_all, H_all
+
+    W_all, H_all = jax.lax.fori_loop(
+        0, n_waves, body, (W_ref[...], H_ref[...]), unroll=False)
+    W_ref[...] = W_all
+    H_ref[...] = H_all
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("wave_chunk", "interpret"))
+def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
+                          wave_chunk: int = 8, interpret: bool = True):
+    """Pallas wave-vectorized NOMAD block update.  Same contract as
+    :func:`repro.kernels.ref.block_sgd_waves`: rows/cols/vals/mask are
+    (n_waves, wave_width) conflict-free wave layouts from
+    ``partition.pack``.
+
+    The grid streams ``wave_chunk`` waves per step through VMEM while the
+    W/H tiles stay resident (constant index_map, in/out aliased) — the
+    same blocking scheme as :func:`nomad_sgd_block`, with the inner
+    sequential chain shortened from nnz scalar steps to n_waves vector
+    steps of ``wave_width`` updates each.
+    """
+    m_tile, k = W.shape
+    n_tile = H.shape[0]
+    n_waves, wave_width = rows.shape
+    dtype = W.dtype
+
+    k_pad = (-k) % LANE
+    nw_pad = (-n_waves) % wave_chunk
+    Wp = jnp.pad(W, ((0, 0), (0, k_pad)))
+    Hp = jnp.pad(H, ((0, 0), (0, k_pad)))
+    rows_p = jnp.pad(rows.astype(jnp.int32), ((0, nw_pad), (0, 0)))
+    cols_p = jnp.pad(cols.astype(jnp.int32), ((0, nw_pad), (0, 0)))
+    vals_p = jnp.pad(vals.astype(dtype), ((0, nw_pad), (0, 0)))
+    mask_p = jnp.pad(mask.astype(jnp.bool_), ((0, nw_pad), (0, 0)))
+    n_chunks = max(1, (n_waves + nw_pad) // wave_chunk)
+
+    scalars = jnp.array([lr, lam], dtype=dtype)
+    kp = k + k_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # scalars
+            pl.BlockSpec((wave_chunk, wave_width), lambda s: (s, 0)),
+            pl.BlockSpec((wave_chunk, wave_width), lambda s: (s, 0)),
+            pl.BlockSpec((wave_chunk, wave_width), lambda s: (s, 0)),
+            pl.BlockSpec((wave_chunk, wave_width), lambda s: (s, 0)),
+            pl.BlockSpec((m_tile, kp), lambda s: (0, 0)),        # W resident
+            pl.BlockSpec((n_tile, kp), lambda s: (0, 0)),        # H resident
+        ],
+        out_specs=[
+            pl.BlockSpec((m_tile, kp), lambda s: (0, 0)),
+            pl.BlockSpec((n_tile, kp), lambda s: (0, 0)),
+        ],
+    )
+
+    W_out, H_out = pl.pallas_call(
+        _wave_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m_tile, kp), dtype),
+            jax.ShapeDtypeStruct((n_tile, kp), dtype),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(scalars, rows_p, cols_p, vals_p, mask_p, Wp, Hp)
+
+    return W_out[:, :k], H_out[:, :k]
+
+
 block_sgd_ref = _ref.block_sgd_ref  # re-export for convenience
+block_sgd_waves = _ref.block_sgd_waves  # re-export for convenience

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
-from .nomad_sgd import nomad_sgd_block
+from .nomad_sgd import nomad_sgd_block, nomad_sgd_waves_block
 
 
 def on_tpu() -> bool:
@@ -18,8 +18,21 @@ def on_tpu() -> bool:
 
 
 def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *, impl: str = "auto",
-              chunk: int = 1024):
-    """NOMAD block SGD update.  impl in {'auto', 'pallas', 'xla'}."""
+              chunk: int = 1024, wave_chunk: int = 8):
+    """NOMAD block SGD update.
+
+    impl in {'auto', 'pallas', 'xla', 'wave', 'wave_pallas'}.  For the
+    sequential impls rows/cols/vals/mask are flat ``(nnz,)`` rating lists;
+    for the wave impls they are the conflict-free ``(n_waves, wave_width)``
+    layouts emitted by ``partition.pack`` (same serial ordering, vectorized
+    execution — see DESIGN.md §3).
+    """
+    if impl == "wave":
+        return ref.block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam)
+    if impl == "wave_pallas":
+        return nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam,
+                                     wave_chunk=wave_chunk,
+                                     interpret=not on_tpu())
     if impl == "xla" or (impl == "auto" and not on_tpu()):
         return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam)
     return nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam,

@@ -46,6 +46,55 @@ def block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam):
     return W, H
 
 
+def sgd_pair_batch(w, h, a, lr, lam):
+    """Batched :func:`sgd_pair` over a leading wave axis.
+
+    w/h: (width, k), a: (width,).  Valid only when the rows of ``w`` (and
+    of ``h``) refer to pairwise-distinct factor vectors — i.e. one
+    conflict-free wave — in which case the batch is exactly equivalent to
+    applying :func:`sgd_pair` sequentially in any order.
+    """
+    err = a - jnp.sum(w * h, axis=-1)
+    w_new = w - lr * (-err[:, None] * h + lam * w)
+    h_new = h - lr * (-err[:, None] * w + lam * h)
+    return w_new, h_new
+
+
+def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam):
+    """Wave-vectorized NOMAD block update (same math as
+    :func:`block_sgd_ref`, executed ~wave_width updates at a time).
+
+    rows/cols/vals/mask: (n_waves, wave_width) as emitted by
+    ``partition.pack``/``pack_cell_waves``.  Waves execute in order (the
+    serial linearization); within a wave rows and columns are
+    pairwise-distinct so the batched gather -> sgd_pair_batch -> scatter
+    is exactly a sequential execution of the wave.  Padded entries
+    (mask=False) scatter to an out-of-bounds index and are dropped.
+    """
+    lr = jnp.asarray(lr, dtype=W.dtype)
+    lam = jnp.asarray(lam, dtype=W.dtype)
+    m_tile = W.shape[0]
+    n_tile = H.shape[0]
+
+    def body(carry, x):
+        W, H = carry
+        r, c, a, m = x
+        w = W[r]                       # (width, k) vectorized gather
+        h = H[c]
+        w_new, h_new = sgd_pair_batch(w, h, a, lr, lam)
+        safe_r = jnp.where(m, r, m_tile)   # OOB => dropped by scatter
+        safe_c = jnp.where(m, c, n_tile)
+        W = W.at[safe_r].set(w_new, mode="drop")
+        H = H.at[safe_c].set(h_new, mode="drop")
+        return (W, H), ()
+
+    (W, H), _ = jax.lax.scan(
+        body, (W, H),
+        (rows.astype(jnp.int32), cols.astype(jnp.int32),
+         vals.astype(W.dtype), mask))
+    return W, H
+
+
 def flash_attention_ref(q, k, v, causal=True, scale=None):
     """Plain materialized attention — oracle for the flash kernel.
 

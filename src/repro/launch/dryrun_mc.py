@@ -23,31 +23,44 @@ import jax.numpy as jnp       # noqa: E402
 import numpy as np            # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from .. import compat                       # noqa: E402
 from ..configs import nomad_mf              # noqa: E402
 from ..core.nomad import _spmd_epoch_fn     # noqa: E402
+from ..core.partition import sub_block_starts  # noqa: E402
 from .hlo_analysis import collective_summary  # noqa: E402
 from .mesh import make_mc_mesh              # noqa: E402
 from .dryrun import ARTIFACT_DIR            # noqa: E402
 
 
-def mc_cell_specs(cfg: nomad_mf.MFConfig, p: int, mesh):
-    """ShapeDtypeStructs for one ring epoch on dataset ``cfg``."""
+def mc_cell_specs(cfg: nomad_mf.MFConfig, p: int, mesh,
+                  sub_blocks: int = 1):
+    """ShapeDtypeStructs for one ring epoch on dataset ``cfg``.
+
+    With ``sub_blocks > 1`` the rating arrays carry the pack-time
+    pre-partitioned per-sub-block layout ``(p, p, sub_blocks, sub_max)``
+    (cols localized to the sub-block) consumed by ``_spmd_epoch_fn``.
+    """
     m_local = -(-cfg.m // p)
     n_local = -(-cfg.n // p)
     # nnz-balanced packing gives ~nnz/p^2 per cell (+25% slack)
     max_nnz = max(1, int(cfg.nnz / (p * p) * 1.25))
+    if sub_blocks > 1:
+        data_shape = (p, p, sub_blocks,
+                      max(1, int(max_nnz / sub_blocks * 1.25)))
+    else:
+        data_shape = (p, p, max_nnz)
     sh = lambda spec: NamedSharding(mesh, spec)
     W = jax.ShapeDtypeStruct((p, m_local, cfg.k), jnp.float32,
                              sharding=sh(P("workers")))
     H = jax.ShapeDtypeStruct((p, n_local, cfg.k), jnp.float32,
                              sharding=sh(P("workers")))
-    rows = jax.ShapeDtypeStruct((p, p, max_nnz), jnp.int32,
+    rows = jax.ShapeDtypeStruct(data_shape, jnp.int32,
                                 sharding=sh(P("workers")))
-    cols = jax.ShapeDtypeStruct((p, p, max_nnz), jnp.int32,
+    cols = jax.ShapeDtypeStruct(data_shape, jnp.int32,
                                 sharding=sh(P("workers")))
-    vals = jax.ShapeDtypeStruct((p, p, max_nnz), jnp.float32,
+    vals = jax.ShapeDtypeStruct(data_shape, jnp.float32,
                                 sharding=sh(P("workers")))
-    mask = jax.ShapeDtypeStruct((p, p, max_nnz), jnp.bool_,
+    mask = jax.ShapeDtypeStruct(data_shape, jnp.bool_,
                                 sharding=sh(P("workers")))
     lr = jax.ShapeDtypeStruct((), jnp.float32)
     return (W, H, rows, cols, vals, mask, lr), max_nnz
@@ -60,13 +73,15 @@ def run_mc_cell(dataset: str, multi_pod: bool, sub_blocks: int = 1,
     p = 512 if multi_pod else 256
     mesh = make_mc_mesh(p)
     epoch_fn = _spmd_epoch_fn(p, "workers", cfg.lam, "xla",
-                              sub_blocks=sub_blocks)
+                              sub_blocks=sub_blocks,
+                              sub_starts=sub_block_starts(-(-cfg.n // p),
+                                                          sub_blocks))
     pspec = P("workers")
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         epoch_fn, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec, pspec, pspec, P()),
         out_specs=(pspec, pspec))
-    sds, max_nnz = mc_cell_specs(cfg, p, mesh)
+    sds, max_nnz = mc_cell_specs(cfg, p, mesh, sub_blocks)
     rec = {"arch": f"nomad_mc_{dataset}", "shape": f"epoch_p{p}",
            "mesh": "ring512" if multi_pod else "ring256",
            "kind": "mc_epoch", "tag": tag, "sub_blocks": sub_blocks,
@@ -81,7 +96,7 @@ def run_mc_cell(dataset: str, multi_pod: bool, sub_blocks: int = 1,
         for k in ("argument_size_in_bytes", "output_size_in_bytes",
                   "temp_size_in_bytes", "alias_size_in_bytes")
         if hasattr(mem, k)}
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     rec["cost"] = {k: float(v) for k, v in ca.items()
                    if isinstance(v, (int, float)) and
                    k in ("flops", "bytes accessed", "transcendentals")}

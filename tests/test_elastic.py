@@ -2,7 +2,7 @@
 convergence of the NOMAD engine."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.runtime.elastic import initial_plan, replan_on_failure
 from repro.runtime.straggler import StragglerMonitor

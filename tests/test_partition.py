@@ -1,7 +1,7 @@
 """Partitioning/property tests for the block packer (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import partition as P
 

@@ -5,7 +5,7 @@ Hypothesis drives the worker count, topology, stragglers and routing.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import objective, serial
 from repro.core.async_sim import NomadSimulator, SimConfig
