@@ -20,11 +20,28 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
 
 
 def _write_kernel_record(rows) -> None:
-    """Persist the kernel suite as {name: {us_per_call, **derived}}."""
+    """Persist kernel + solver rows as {name: {us_per_call, **derived}}.
+
+    Merge granularity is the ``prefix/`` namespace: a run replaces every
+    entry of the namespaces it produced (so renamed/deleted rows don't
+    linger as stale data) while preserving the other suite's entries
+    (so ``--only kernel`` doesn't drop the solver sweep)."""
     record = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                record = json.load(f)
+        except (OSError, ValueError):
+            record = {}
+    prefixes = {name.split("/", 1)[0] for name, _, _ in rows}
+    record = {k: v for k, v in record.items()
+              if k.split("/", 1)[0] not in prefixes}
     for name, us, derived in rows:
-        # speedup rows carry a dimensionless ratio, not a latency
-        key = "speedup" if name.endswith("_speedup") else "us_per_call"
+        # speedup rows carry a dimensionless ratio, not a latency;
+        # solver rows a per-epoch latency
+        key = ("speedup" if name.endswith("_speedup")
+               else "us_per_epoch" if name.startswith("solver/")
+               else "us_per_call")
         entry = {key: round(float(us), 3)}
         for kv in str(derived).split():
             if "=" in kv:
@@ -46,7 +63,7 @@ def main() -> None:
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
 
-    from . import paper_figs, kernel_bench, roofline
+    from . import paper_figs, kernel_bench, roofline, solver_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -60,6 +77,7 @@ def main() -> None:
         ("fig13", paper_figs.fig13_lambda),
         ("fig14", paper_figs.fig14_rank),
         ("kernel", kernel_bench.kernel_rows),
+        ("solver", solver_bench.solver_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -72,7 +90,7 @@ def main() -> None:
             rows = fn()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
-            if name == "kernel":
+            if name in ("kernel", "solver"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -1,0 +1,59 @@
+"""Per-solver throughput sweep through the registry (paper Fig. 8/11
+apples-to-apples): every registered solver runs the same MCProblem via
+``api.solve`` and reports updates/s + final test RMSE.  Recorded into
+``BENCH_kernels.json`` by ``benchmarks/run.py`` so the NOMAD-vs-DSGD
+comparison survives across PRs.
+
+One (coordinate) "update" = one rating visited once: nnz * epochs for the
+epoch-based solvers, the simulator's own update counter for async_sim,
+nnz * k * epochs coordinate touches normalized back by k for CCD++/ALS
+(they sweep features, not ratings — comparable only as a visit rate).
+"""
+from __future__ import annotations
+
+import time
+
+from repro import api
+from repro.core.stepsize import PowerSchedule
+
+# bench shape: big enough that jit dispatch overhead doesn't dominate,
+# small enough for CI
+_M, _N, _NNZ, _K, _EPOCHS = 600, 240, 24_000, 16, 4
+
+
+def _configs():
+    sched = PowerSchedule(alpha=0.05, beta=0.02)
+    base = dict(k=_K, lam=0.01, epochs=_EPOCHS, seed=0, schedule=sched)
+    return {
+        "nomad": api.NomadConfig(**base, p=4, kernel="xla"),
+        # wave path: conflict-free but wave count tracks the max item
+        # degree, so power-law data yields many narrow waves here — the
+        # uniform-cell speedup lives in kernel/nomad_sgd_wave_speedup
+        "nomad_wave": api.NomadConfig(**base, p=4, kernel="wave"),
+        "dsgd": api.DsgdConfig(**base, p=4),
+        "ccdpp": api.CcdConfig(**base),
+        "als": api.AlsConfig(**base),
+        "hogwild": api.HogwildConfig(**base, batch=256),
+        "async_sim": api.AsyncSimConfig(**base, p=4),
+    }
+
+
+def solver_rows() -> list:
+    problem = api.MCProblem.synthetic(_M, _N, _NNZ, k=_K, seed=0,
+                                      noise=0.05, test_frac=0.1)
+    rows = []
+    for name, cfg in _configs().items():
+        t0 = time.perf_counter()
+        res = api.solve(problem, cfg)         # includes jit compile
+        warm = api.solve(problem, cfg)        # steady-state timing
+        wall = warm.wall_time
+        n_updates = (warm.extras.get("n_updates")
+                     if warm.solver == "async_sim"
+                     else problem.nnz * _EPOCHS)
+        ups = n_updates / max(wall, 1e-9)
+        rmse = float(warm.trace_rmse[-1]) if len(warm.trace_rmse) else -1.0
+        rows.append((f"solver/{name}", wall * 1e6 / _EPOCHS,
+                     f"updates_per_s={ups:.0f} rmse={rmse:.4f} "
+                     f"solver={warm.solver} "
+                     f"cold_s={time.perf_counter() - t0 - wall:.2f}"))
+    return rows

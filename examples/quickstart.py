@@ -1,29 +1,32 @@
-"""Quickstart: NOMAD matrix completion in ~20 lines.
+"""Quickstart: NOMAD matrix completion through the one front door.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .           # once, from the repo root
+    python examples/quickstart.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.core import nomad
+from repro import api
 from repro.core.stepsize import PowerSchedule
-from repro.data.synthetic import synthetic_ratings, train_test_split
 
 # a Netflix-shaped synthetic problem (users x items, power-law degrees)
-rows, cols, vals, _, _ = synthetic_ratings(
-    m=2000, n=400, nnz=80_000, k=16, seed=0, noise=0.05)
-(train, test) = train_test_split(rows, cols, vals, test_frac=0.1)
+# with a 10% held-out test split baked into the problem object
+problem = api.MCProblem.synthetic(
+    m=2000, n=400, nnz=80_000, k=16, seed=0, noise=0.05, test_frac=0.1)
 
-W, H, trace = nomad.fit(
-    *train, m=2000, n=400, k=16,
-    p=8,                                   # 8 NOMAD workers (ring)
-    lam=0.01,
-    schedule=PowerSchedule(alpha=0.1, beta=0.01),   # eq. (11)
-    epochs=15,
-    test=test,
-    impl="wave",                           # conflict-free vectorized path
+result = api.solve(
+    problem,
+    api.NomadConfig(
+        k=16,
+        p=8,                                   # 8 NOMAD workers (ring)
+        lam=0.01,
+        schedule=PowerSchedule(alpha=0.1, beta=0.01),   # eq. (11)
+        epochs=15,
+        kernel="wave",                         # conflict-free vectorized path
+    ),
     verbose=True,
 )
-print(f"final test RMSE: {trace[-1][1]:.4f}")
+print(f"final test RMSE: {result.rmse[-1]:.4f}  "
+      f"({result.wall_time:.1f}s wall, solver={result.solver})")
+
+# the same problem, swept through a baseline with zero glue:
+dsgd = api.solve(problem, api.DsgdConfig(k=16, p=8, lam=0.01, epochs=15,
+                                         schedule=PowerSchedule(0.1, 0.01)))
+print(f"DSGD for comparison: {dsgd.rmse[-1]:.4f}")

@@ -1,12 +1,10 @@
 """Batched-request serving demo: prefill + sampled decode on any --arch
 (reduced config).  Wraps repro.launch.serve.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch musicgen_large
+    pip install -e .           # once, from the repo root
+    python examples/serve_lm.py --arch musicgen_large
 """
-import os
 import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]

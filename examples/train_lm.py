@@ -3,15 +3,12 @@ qwen2.5 family for a configurable number of steps with checkpoint/resume.
 
 Defaults are sized for a quick CPU demo; for the full exercise:
 
-    PYTHONPATH=src python examples/train_lm.py --steps 300 --d-model 512 \
+    pip install -e .           # once, from the repo root
+    python examples/train_lm.py --steps 300 --d-model 512 \
         --layers 12 --seq 256   # ~100M params, a few hundred steps
 """
 import argparse
 import dataclasses
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

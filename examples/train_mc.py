@@ -1,26 +1,26 @@
 """End-to-end NOMAD training driver (the paper's workload).
 
-Trains a matrix-completion model on Netflix-shaped synthetic data with the
-SPMD ring engine, asynchronous checkpointing, deterministic resume, and an
-optional mid-run simulated worker failure handled by elastic re-planning.
+Trains a matrix-completion model on Netflix-shaped synthetic data through
+``repro.api.solve`` with asynchronous checkpointing and deterministic
+resume: each checkpoint round is a ``solve(..., warm_start=...)`` call, and
+because the step-size schedule continues from ``FitResult.epochs_done``,
+the chunked run is bitwise-identical to an uninterrupted one.
 
-    PYTHONPATH=src python examples/train_mc.py --scale 2e-3 --epochs 20
+    pip install -e .           # once, from the repo root
+    python examples/train_mc.py --scale 2e-3 --epochs 20
     # full Netflix-scale (needs a real cluster / lots of RAM):
-    PYTHONPATH=src python examples/train_mc.py --scale 1.0 --k 100
+    python examples/train_mc.py --scale 1.0 --k 100
 """
 import argparse
+import dataclasses
 import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import api
 from repro.checkpoint import AsyncCheckpointer, restore_checkpoint
-from repro.core import nomad, objective, partition
 from repro.core.stepsize import PowerSchedule
-from repro.data.synthetic import train_test_split
 
 
 def main():
@@ -40,54 +40,54 @@ def main():
                     help="block-update kernel (wave = conflict-free "
                          "vectorized path, DESIGN.md §3)")
     args = ap.parse_args()
+    if args.ckpt_every < 1:
+        ap.error("--ckpt-every must be >= 1")
 
     # scale users linearly and keep Netflix's ~37 ratings/user so the
     # problem stays well-determined at laptop scale
-    from repro.data.synthetic import synthetic_ratings
     m = max(500, int(2_649_429 * args.scale))
     n = max(200, int(17_770 * args.scale))
-    rows, cols, vals, _, _ = synthetic_ratings(
-        m, n, 37 * m, k=args.k, seed=0, noise=0.1)
-    (train, test) = train_test_split(rows, cols, vals, 0.05, seed=1)
-    print(f"dataset: m={m} n={n} nnz={len(train[0])} "
+    problem = api.MCProblem.synthetic(m, n, 37 * m, k=args.k, seed=0,
+                                      noise=0.1, test_frac=0.05,
+                                      split_seed=1)
+    print(f"dataset: m={m} n={n} nnz={problem.nnz} "
           f"(Netflix x {args.scale:g})")
 
-    br = partition.pack(*train, m, n, args.p, balanced=True,
-                        waves=args.impl in ("wave", "wave_pallas"))
-    eng = nomad.NomadRingEngine(
-        br=br, k=args.k, lam=args.lam, impl=args.impl,
+    config = api.NomadConfig(
+        k=args.k, lam=args.lam, epochs=args.ckpt_every, seed=0, p=args.p,
+        kernel=args.impl,
         schedule=PowerSchedule(alpha=args.alpha, beta=args.beta))
-    W0, H0 = objective.init_factors_np(0, m, n, args.k)
-    eng.init_factors(W0.astype(np.float32), H0.astype(np.float32))
 
     # key the checkpoint dir by problem signature so a re-run with a
-    # different --scale starts fresh instead of restoring stale shapes
-    ckpt_dir = os.path.join(args.ckpt_dir, f"m{m}_n{n}_k{args.k}_p{args.p}")
+    # different --scale starts fresh instead of restoring stale shapes;
+    # the 'wh' tag separates this full-factor {W,H} format from the old
+    # sharded {Ws,Hs} checkpoints, which are not compatible
+    ckpt_dir = os.path.join(args.ckpt_dir,
+                            f"m{m}_n{n}_k{args.k}_p{args.p}_wh")
     ckpt = AsyncCheckpointer(ckpt_dir)
-    state_like = {"Ws": np.asarray(eng.Ws), "Hs": np.asarray(eng.Hs)}
+    state_like = {"W": np.zeros((m, args.k), np.float32),
+                  "H": np.zeros((n, args.k), np.float32)}
     restored, step = restore_checkpoint(ckpt_dir, state_like)
-    start = 0
+    warm = None
     if restored is not None:
-        import jax.numpy as jnp
-        eng.Ws = jnp.asarray(restored["Ws"])
-        eng.Hs = jnp.asarray(restored["Hs"])
-        eng.epoch_idx = step
-        start = step
+        warm = api.FitResult(
+            W=restored["W"], H=restored["H"],
+            trace_epochs=np.asarray([]), trace_rmse=np.asarray([]),
+            epochs_done=step)
         print(f"resumed from epoch {step}")
 
     t0 = time.time()
-    for epoch in range(start, args.epochs):
-        eng.run_epoch()
-        W, H = eng.factors()
-        import jax.numpy as jnp
-        r = float(objective.rmse(jnp.asarray(W), jnp.asarray(H),
-                                 jnp.asarray(test[0]), jnp.asarray(test[1]),
-                                 jnp.asarray(test[2], jnp.float32)))
-        print(f"epoch {epoch + 1:3d}  test RMSE {r:.4f}  "
-              f"({(time.time() - t0):.1f}s)")
-        if (epoch + 1) % args.ckpt_every == 0:
-            ckpt.save(epoch + 1,
-                      {"Ws": np.asarray(eng.Ws), "Hs": np.asarray(eng.Hs)})
+    done = int(warm.epochs_done) if warm is not None else 0
+    result = warm
+    while done < args.epochs:
+        rounds = min(args.ckpt_every, args.epochs - done)
+        cfg = dataclasses.replace(config, epochs=rounds)
+        result = api.solve(problem, cfg, warm_start=result)
+        done = int(result.epochs_done)
+        for e, r in result.trace:
+            print(f"epoch {e:3d}  test RMSE {r:.4f}  "
+                  f"({(time.time() - t0):.1f}s)")
+        ckpt.save(done, {"W": result.W, "H": result.H})
     ckpt.wait()
     print("done.")
 

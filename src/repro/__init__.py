@@ -2,6 +2,9 @@
 
 The paper's nomadic-ownership / owner-computes / comm-overlap discipline,
 implemented three ways (see DESIGN.md):
+  * api.py       — the front door: ``MCProblem`` + ``SolverConfig`` ->
+                   ``solve()`` -> ``FitResult``, with a registry spanning
+                   NOMAD, every baseline, and the async simulator
   * core/        — the matrix-completion algorithm itself: discrete-event
                    Algorithm 1 simulator (bitwise-serializable), SPMD ring
                    engine (shard_map + ppermute), baselines
@@ -10,4 +13,19 @@ implemented three ways (see DESIGN.md):
   * models/ etc. — a full LM training/serving stack (10 architectures)
                    whose dry-run/roofline apparatus lives in launch/
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays cheap; `repro.solve` (or anything in
+    # api.__all__ — the single source of truth) pulls in the api.
+    # Underscore names are excluded so interpreter/inspect probes for
+    # dunders don't trigger the import.
+    if not name.startswith("_"):
+        import importlib
+        api = importlib.import_module(".api", __name__)
+        if name == "api":
+            return api
+        if name in api.__all__:
+            return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

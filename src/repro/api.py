@@ -1,0 +1,547 @@
+"""One front door for matrix completion: problem + config -> result.
+
+The paper's central empirical claim is a *comparison* — NOMAD vs.
+DSGD/CCD++/ALS/Hogwild on the same problems — so the public API is built
+around three typed objects and a solver registry instead of five
+incompatible entry points:
+
+* :class:`MCProblem`    — immutable dataset container (COO train + held-out
+                          test/val, sizes, dtype) that owns *packing*:
+                          ``problem.packed(p, waves=..., sub_blocks=...)``
+                          memoizes the ``BlockedRatings`` so repacking stops
+                          being every caller's job.
+* :class:`SolverConfig` — frozen per-solver hyperparameter records
+                          (:class:`NomadConfig`, :class:`DsgdConfig`,
+                          :class:`CcdConfig`, :class:`AlsConfig`,
+                          :class:`HogwildConfig`, :class:`AsyncSimConfig`);
+                          invalid combinations fail at construction, not
+                          mid-run.
+* :class:`FitResult`    — factors, per-epoch trace as arrays, wall/virtual
+                          timings, and the exact config that produced them;
+                          pass one back as ``warm_start=`` to resume.
+
+``solve(problem, config, *, mesh=None)`` dispatches through the
+``@register_solver`` registry — NOMAD (local emulation and shard_map SPMD),
+every baseline, and the discrete-event simulator of Algorithm 1 all run
+through this single call, which is what lets scripts sweep solvers with a
+flag (``benchmarks/run.py --only solver``) instead of bespoke glue.
+
+    >>> from repro import api
+    >>> problem = api.MCProblem.synthetic(m=2000, n=400, nnz=80_000, k=16)
+    >>> res = api.solve(problem, api.NomadConfig(k=16, p=8, kernel="wave"))
+    >>> res.rmse[-1], res.wall_time
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type, Union
+
+import numpy as np
+
+from .core import partition as part
+from .core.stepsize import PowerSchedule
+from .kernels.policy import KernelPolicy
+
+__all__ = [
+    "MCProblem", "SolverConfig", "NomadConfig", "DsgdConfig", "CcdConfig",
+    "AlsConfig", "HogwildConfig", "AsyncSimConfig", "FitResult",
+    "KernelPolicy", "solve", "register_solver", "solver_names",
+    "config_for",
+]
+
+
+# ---------------------------------------------------------------------- #
+# Problem container                                                       #
+# ---------------------------------------------------------------------- #
+
+def _frozen_coo(rows, cols, vals) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    # preserve incoming index/value dtypes (an int32/float32 Netflix-scale
+    # COO set must not silently double its host footprint); only non-
+    # numeric inputs are promoted to the canonical wide types
+    r = np.array(rows, copy=True)
+    c = np.array(cols, copy=True)
+    v = np.array(vals, copy=True)
+    if r.dtype.kind not in "iu":
+        r = r.astype(np.int64)
+    if c.dtype.kind not in "iu":
+        c = c.astype(np.int64)
+    if v.dtype.kind != "f":
+        v = v.astype(np.float64)
+    if not (len(r) == len(c) == len(v)):
+        raise ValueError("rows/cols/vals length mismatch: "
+                         f"{len(r)}/{len(c)}/{len(v)}")
+    for a in (r, c, v):
+        a.flags.writeable = False
+    return r, c, v
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MCProblem:
+    """Immutable matrix-completion dataset (COO train / val / test).
+
+    Owns packing: :meth:`packed` memoizes the blocked layouts per
+    ``(p, balanced, waves, wave_width, sub_blocks)`` so every solver and
+    benchmark shares one pack instead of re-running the O(nnz) coloring.
+    """
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    m: int
+    n: int
+    test: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    val: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+    dtype: Any = np.float32
+
+    def __post_init__(self):
+        r, c, v = _frozen_coo(self.rows, self.cols, self.vals)
+        object.__setattr__(self, "rows", r)
+        object.__setattr__(self, "cols", c)
+        object.__setattr__(self, "vals", v)
+        self._check_bounds("train", r, c)
+        for name in ("test", "val"):
+            split = getattr(self, name)
+            if split is not None:
+                split = _frozen_coo(*split)
+                self._check_bounds(name, split[0], split[1])
+                object.__setattr__(self, name, split)
+        object.__setattr__(self, "_pack_cache", {})
+
+    def _check_bounds(self, which, r, c):
+        # out-of-range test indices would otherwise be silently clamped
+        # by the jit'd eval gather — fail here, at construction
+        if len(r) and (r.min() < 0 or c.min() < 0
+                       or r.max() >= self.m or c.max() >= self.n):
+            raise ValueError(
+                f"{which} rating indices out of range for matrix shape "
+                f"({self.m}, {self.n})")
+
+    # -------------------------------------------------------------- #
+    @property
+    def nnz(self) -> int:
+        return len(self.rows)
+
+    @property
+    def train(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.rows, self.cols, self.vals
+
+    def packed(self, p: int, *, balanced: bool = True, waves: bool = False,
+               wave_width: Optional[int] = None,
+               sub_blocks: int = 1) -> part.BlockedRatings:
+        """Memoized ``partition.pack`` of the training ratings."""
+        key = (p, balanced, waves, wave_width, sub_blocks)
+        cache = self._pack_cache
+        if key not in cache:
+            cache[key] = part.pack(
+                self.rows, self.cols, self.vals, self.m, self.n, p,
+                balanced=balanced, waves=waves, wave_width=wave_width,
+                sub_blocks=sub_blocks)
+        return cache[key]
+
+    # -------------------------------------------------------------- #
+    @classmethod
+    def from_coo(cls, rows, cols, vals, m: int, n: int, *,
+                 test=None, val=None, dtype=np.float32) -> "MCProblem":
+        return cls(rows=rows, cols=cols, vals=vals, m=m, n=n, test=test,
+                   val=val, dtype=dtype)
+
+    @classmethod
+    def synthetic(cls, m: int, n: int, nnz: int, k: int = 16, *,
+                  seed: int = 0, noise: float = 0.05,
+                  test_frac: float = 0.1,
+                  split_seed: int = 0) -> "MCProblem":
+        """Netflix-shaped synthetic problem with a held-out test split."""
+        from .data.synthetic import synthetic_ratings, train_test_split
+        rows, cols, vals, _, _ = synthetic_ratings(
+            m, n, nnz, k=k, seed=seed, noise=noise)
+        if test_frac > 0:
+            train, test = train_test_split(rows, cols, vals,
+                                           test_frac=test_frac,
+                                           seed=split_seed)
+            return cls(rows=train[0], cols=train[1], vals=train[2],
+                       m=m, n=n, test=test)
+        return cls(rows=rows, cols=cols, vals=vals, m=m, n=n)
+
+
+# ---------------------------------------------------------------------- #
+# Solver configs                                                          #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Hyperparameters shared by every solver.  Frozen: validation happens
+    once, at construction."""
+    k: int = 16
+    lam: float = 0.05
+    epochs: float = 10
+    seed: int = 0
+    schedule: Optional[PowerSchedule] = None
+
+    #: epoch-based solvers require integral epochs; only the simulator
+    #: (virtual time) can stop mid-epoch
+    _fractional_epochs = False
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.epochs < 0:
+            raise ValueError(f"epochs must be >= 0, got {self.epochs}")
+        if not self._fractional_epochs and self.epochs != int(self.epochs):
+            raise ValueError(
+                f"epochs must be integral for {type(self).__name__}, got "
+                f"{self.epochs} (fractional epochs exist only for "
+                "AsyncSimConfig)")
+
+    def make_schedule(self) -> PowerSchedule:
+        return self.schedule or PowerSchedule()
+
+
+@dataclasses.dataclass(frozen=True)
+class NomadConfig(SolverConfig):
+    """NOMAD ring engine (local emulation, or SPMD when ``solve`` gets a
+    mesh).  ``kernel`` is a :class:`KernelPolicy` or a legacy impl string;
+    ``sub_blocks`` merges into the policy."""
+    p: int = 4
+    kernel: Union[str, KernelPolicy] = "xla"
+    balanced: bool = True
+    sub_blocks: int = 1
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.p < 1:
+            raise ValueError(f"p must be >= 1, got {self.p}")
+        # coercion validates impl x sub_blocks at construction time
+        object.__setattr__(self, "kernel",
+                           KernelPolicy.coerce(self.kernel,
+                                               sub_blocks=self.sub_blocks))
+        object.__setattr__(self, "sub_blocks", self.kernel.sub_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class DsgdConfig(SolverConfig):
+    """Bulk-synchronous DSGD [Gemulla et al., 2011]."""
+    p: int = 4
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.p < 1:
+            raise ValueError(f"p must be >= 1, got {self.p}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CcdConfig(SolverConfig):
+    """CCD++ [Yu et al., 2012] feature-wise coordinate descent."""
+    inner: int = 3
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.inner < 1:
+            raise ValueError(f"inner must be >= 1, got {self.inner}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlsConfig(SolverConfig):
+    """Exact alternating least squares [Zhou et al., 2008]."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HogwildConfig(SolverConfig):
+    """Lock-free racing minibatch SGD [Recht et al., 2011] — the
+    non-serializable contrast class."""
+    batch: int = 256
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncSimConfig(SolverConfig):
+    """Discrete-event simulator of Algorithm 1 (virtual time, real
+    float64 numerics).  ``mode`` selects NOMAD, bulk-synchronous DSGD, or
+    DSGD++ with communication overlap; ``epochs`` may be fractional."""
+    p: int = 4
+    a: float = 1.0                 # per-rating processing cost (x k)
+    c: float = 20.0                # per-item communication latency (x k)
+    mode: str = "nomad"            # 'nomad' | 'dsgd' | 'dsgd++'
+    _fractional_epochs = True
+    load_balance: bool = False
+    speed: Optional[Tuple[float, ...]] = None
+    failures: Tuple[Tuple[float, int], ...] = ()
+    record_every: float = 0.5
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.p < 1:
+            raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.mode not in ("nomad", "dsgd", "dsgd++"):
+            raise ValueError(
+                f"mode={self.mode!r} not in ('nomad', 'dsgd', 'dsgd++')")
+        if self.speed is not None:
+            object.__setattr__(self, "speed", tuple(float(s)
+                                                    for s in self.speed))
+            if len(self.speed) != self.p:
+                raise ValueError(
+                    f"speed has {len(self.speed)} entries for p={self.p}")
+
+    def to_sim_config(self):
+        from .core.async_sim import SimConfig
+        return SimConfig(
+            p=self.p, k=self.k, lam=self.lam,
+            schedule=self.make_schedule(), a=self.a, c=self.c,
+            epochs=float(self.epochs), load_balance=self.load_balance,
+            speed=(None if self.speed is None
+                   else np.asarray(self.speed, dtype=np.float64)),
+            failures=self.failures, seed=self.seed,
+            record_every=self.record_every)
+
+
+# ---------------------------------------------------------------------- #
+# Result                                                                  #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class FitResult:
+    """What every solver returns: factors, trace arrays, timings, and the
+    exact config for reproducibility.  Pass back as ``warm_start=`` to
+    resume (NOMAD and DSGD continue their step-size schedule from
+    ``epochs_done``, so split runs are bitwise-identical to one run)."""
+    W: np.ndarray
+    H: np.ndarray
+    trace_epochs: np.ndarray        # per-record epoch number
+    trace_rmse: np.ndarray          # per-record held-out RMSE
+    epochs_done: float              # cumulative epochs incl. warm start
+    wall_time: float = 0.0
+    virtual_time: Optional[float] = None   # simulator virtual clock
+    solver: str = ""
+    config: Optional[SolverConfig] = None
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def trace(self) -> List[Tuple[Any, float]]:
+        """Legacy ``[(epoch, rmse), ...]`` view of the trace arrays."""
+        return list(zip(self.trace_epochs.tolist(),
+                        self.trace_rmse.tolist()))
+
+    @property
+    def rmse(self) -> np.ndarray:
+        return self.trace_rmse
+
+
+def _as_trace_arrays(trace, epoch_col=0, rmse_col=-1):
+    if not trace:
+        return np.asarray([], dtype=np.int64), np.asarray([],
+                                                          dtype=np.float64)
+    epochs = np.asarray([t[epoch_col] for t in trace])
+    rmses = np.asarray([float(t[rmse_col]) for t in trace],
+                       dtype=np.float64)
+    return epochs, rmses
+
+
+# ---------------------------------------------------------------------- #
+# Registry                                                                #
+# ---------------------------------------------------------------------- #
+
+_SOLVERS: Dict[Type[SolverConfig], Tuple[str, Callable]] = {}
+_BY_NAME: Dict[str, Type[SolverConfig]] = {}
+
+
+def register_solver(name: str, config_cls: Type[SolverConfig]):
+    """Register ``fn(problem, config, *, mesh, warm_start, verbose) ->
+    FitResult`` as the solver for ``config_cls`` (and for lookups by
+    ``name``)."""
+    def deco(fn):
+        if name in _BY_NAME:
+            raise ValueError(f"solver {name!r} already registered")
+        if config_cls in _SOLVERS:
+            raise ValueError(
+                f"config type {config_cls.__name__} already registered")
+        _SOLVERS[config_cls] = (name, fn)
+        _BY_NAME[name] = config_cls
+        return fn
+    return deco
+
+
+def solver_names() -> List[str]:
+    """Names of all registered solvers."""
+    return sorted(_BY_NAME)
+
+
+def config_for(name: str) -> Type[SolverConfig]:
+    """Config class registered under ``name`` (for CLI/benchmark sweeps)."""
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"no solver named {name!r}; available: {solver_names()}"
+        ) from None
+
+
+def solve(problem: MCProblem, config: SolverConfig, *, mesh=None,
+          warm_start: Optional[FitResult] = None,
+          verbose: bool = False) -> FitResult:
+    """Run the solver registered for ``type(config)`` on ``problem``.
+
+    ``mesh``       — optional device mesh; solvers that support SPMD
+                     execution (NOMAD) shard over its first axis.
+    ``warm_start`` — a previous :class:`FitResult` to resume from.
+    """
+    if not isinstance(problem, MCProblem):
+        raise TypeError(f"problem must be MCProblem, got "
+                        f"{type(problem).__name__}")
+    entry = None
+    for cls in type(config).__mro__:
+        if cls in _SOLVERS:
+            entry = _SOLVERS[cls]
+            break
+    if entry is None:
+        raise KeyError(
+            f"no solver registered for {type(config).__name__}; "
+            f"available: {solver_names()}")
+    name, fn = entry
+    t0 = time.perf_counter()
+    result = fn(problem, config, mesh=mesh, warm_start=warm_start,
+                verbose=verbose)
+    result.wall_time = time.perf_counter() - t0
+    result.solver = name
+    result.config = config
+    return result
+
+
+def _warm_factors(warm_start: Optional[FitResult], dtype=None):
+    if warm_start is None:
+        return None, None, 0
+    W0 = np.asarray(warm_start.W, dtype=dtype)
+    H0 = np.asarray(warm_start.H, dtype=dtype)
+    return W0, H0, warm_start.epochs_done
+
+
+# ---------------------------------------------------------------------- #
+# Solver implementations (adapters over core/)                            #
+# ---------------------------------------------------------------------- #
+
+@register_solver("nomad", NomadConfig)
+def _solve_nomad(problem: MCProblem, config: NomadConfig, *, mesh=None,
+                 warm_start=None, verbose=False) -> FitResult:
+    import jax
+    from .core.nomad import NomadRingEngine
+    from .core.objective import init_factors
+
+    policy = config.kernel
+    br = problem.packed(config.p, balanced=config.balanced,
+                        waves=policy.wave, sub_blocks=policy.sub_blocks)
+    eng = NomadRingEngine(br=br, k=config.k, lam=config.lam,
+                          schedule=config.make_schedule(), policy=policy,
+                          mesh=mesh)
+    W0, H0, start = _warm_factors(warm_start, dtype=problem.dtype)
+    if W0 is None:
+        W0, H0 = init_factors(jax.random.key(config.seed), problem.m,
+                              problem.n, config.k)
+        W0, H0 = np.asarray(W0), np.asarray(H0)
+    eng.init_factors(W0, H0)
+    eng.epoch_idx = int(start)      # schedule resumes where it left off
+    trace = eng.train(int(config.epochs), test=problem.test,
+                      verbose=verbose)
+    W, H = eng.factors()
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+@register_solver("dsgd", DsgdConfig)
+def _solve_dsgd(problem: MCProblem, config: DsgdConfig, *, mesh=None,
+                warm_start=None, verbose=False) -> FitResult:
+    from .core import baselines
+    W0, H0, start = _warm_factors(warm_start)
+    W, H, trace = baselines.dsgd(
+        problem.rows, problem.cols, problem.vals, problem.m, problem.n,
+        config.k, config.p, lam=config.lam, epochs=int(config.epochs),
+        schedule=config.make_schedule(), seed=config.seed,
+        test=problem.test, W0=W0, H0=H0, start_epoch=int(start))
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+@register_solver("ccdpp", CcdConfig)
+def _solve_ccdpp(problem: MCProblem, config: CcdConfig, *, mesh=None,
+                 warm_start=None, verbose=False) -> FitResult:
+    from .core import baselines
+    W0, H0, start = _warm_factors(warm_start)
+    W, H, trace = baselines.ccdpp(
+        problem.rows, problem.cols, problem.vals, problem.m, problem.n,
+        config.k, lam=config.lam, epochs=int(config.epochs),
+        inner=config.inner, seed=config.seed, test=problem.test,
+        W0=W0, H0=H0, start_epoch=int(start))
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+@register_solver("als", AlsConfig)
+def _solve_als(problem: MCProblem, config: AlsConfig, *, mesh=None,
+               warm_start=None, verbose=False) -> FitResult:
+    from .core import baselines
+    W0, H0, start = _warm_factors(warm_start)
+    W, H, trace = baselines.als(
+        problem.rows, problem.cols, problem.vals, problem.m, problem.n,
+        config.k, lam=config.lam, epochs=int(config.epochs),
+        seed=config.seed, test=problem.test, W0=W0, H0=H0,
+        start_epoch=int(start))
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+@register_solver("hogwild", HogwildConfig)
+def _solve_hogwild(problem: MCProblem, config: HogwildConfig, *, mesh=None,
+                   warm_start=None, verbose=False) -> FitResult:
+    from .core import baselines
+    W0, H0, start = _warm_factors(warm_start)
+    W, H, trace = baselines.hogwild(
+        problem.rows, problem.cols, problem.vals, problem.m, problem.n,
+        config.k, lam=config.lam, epochs=int(config.epochs),
+        batch=config.batch, schedule=config.make_schedule(),
+        seed=config.seed, test=problem.test, W0=W0, H0=H0,
+        start_epoch=int(start))
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+@register_solver("async_sim", AsyncSimConfig)
+def _solve_async_sim(problem: MCProblem, config: AsyncSimConfig, *,
+                     mesh=None, warm_start=None,
+                     verbose=False) -> FitResult:
+    from .core.async_sim import NomadSimulator, simulate_dsgd
+    from .core.objective import init_factors_np
+    W0, H0, start = _warm_factors(warm_start, dtype=np.float64)
+    if W0 is None:
+        W0, H0 = init_factors_np(config.seed, problem.m, problem.n,
+                                 config.k)
+    cfg = config.to_sim_config()
+    if config.mode == "nomad":
+        res = NomadSimulator(cfg, problem.m, problem.n, problem.rows,
+                             problem.cols, problem.vals, W0, H0,
+                             test=problem.test).run()
+    else:
+        res = simulate_dsgd(cfg, problem.m, problem.n, problem.rows,
+                            problem.cols, problem.vals, W0, H0,
+                            test=problem.test,
+                            overlap=config.mode == "dsgd++")
+    nnz = max(1, problem.nnz)
+    epochs = np.asarray([start + upd / nnz for _, upd, _ in res.trace],
+                        dtype=np.float64)
+    rmses = np.asarray([r for _, _, r in res.trace], dtype=np.float64)
+    return FitResult(
+        W=res.W, H=res.H, trace_epochs=epochs, trace_rmse=rmses,
+        epochs_done=float(start) + res.n_updates / nnz,
+        virtual_time=res.sim_time,
+        extras={"n_updates": res.n_updates,
+                "throughput": res.throughput,
+                "busy_time": res.busy_time,
+                "trace_virtual_time": np.asarray(
+                    [t for t, _, _ in res.trace], dtype=np.float64),
+                "update_log": res.update_log})

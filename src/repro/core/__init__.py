@@ -1,10 +1,11 @@
 """NOMAD core: the paper's contribution.
 
-Public API:
-  fit                      — one-call NOMAD matrix completion
+The public entry point is ``repro.api.solve(problem, config)``; this
+package holds the executors behind the registry:
   NomadRingEngine          — SPMD ring engine (shard_map + ppermute)
   NomadSimulator           — paper-faithful discrete-event Algorithm 1
   baselines: dsgd / ccdpp / als / hogwild
+  fit                      — deprecated one-call shim over api.solve
 """
 from .nomad import NomadRingEngine, fit
 from .async_sim import NomadSimulator, SimConfig, SimResult, simulate_dsgd

@@ -37,6 +37,10 @@ from .stepsize import PowerSchedule
 
 @dataclasses.dataclass
 class SimConfig:
+    """Internal knob record for the simulators below.  The public front
+    door is ``repro.api.AsyncSimConfig`` + ``solve`` (mode='nomad' /
+    'dsgd' / 'dsgd++'), which builds one of these via
+    ``AsyncSimConfig.to_sim_config``."""
     p: int = 4                    # number of workers
     k: int = 16                   # latent dimension
     lam: float = 0.05

@@ -45,10 +45,14 @@ def _dsgd_subepoch(Ws, Hs, rows, cols, vals, mask, lr, lam, impl="xla"):
 
 def dsgd(rows, cols, vals, m, n, k, p, *, lam=0.05, epochs=10,
          schedule: Optional[PowerSchedule] = None, seed=0, test=None,
-         W0=None, H0=None):
+         W0=None, H0=None, start_epoch=0):
     """Bulk-synchronous DSGD.  Identical update math to NOMAD's ring — the
     difference (bulk barrier vs. asynchronous circulation) only manifests
-    in wall-clock behaviour, which the discrete-event simulator measures."""
+    in wall-clock behaviour, which the discrete-event simulator measures.
+
+    ``start_epoch`` resumes the step-size schedule mid-run (warm starts
+    via ``api.solve(..., warm_start=...)`` are bitwise-identical to one
+    uninterrupted run)."""
     schedule = schedule or PowerSchedule()
     br = part.pack(rows, cols, vals, m, n, p, balanced=True, waves=False)
     if W0 is None:
@@ -57,7 +61,7 @@ def dsgd(rows, cols, vals, m, n, k, p, *, lam=0.05, epochs=10,
     Ws, Hs = jnp.asarray(Ws), jnp.asarray(Hs)
     R, C, V, M = (jnp.asarray(x) for x in (br.rows, br.cols, br.vals, br.mask))
     trace = []
-    for e in range(epochs):
+    for e in range(start_epoch, start_epoch + epochs):
         lr = jnp.asarray(schedule(e), Ws.dtype)
         for s in range(p):
             Ws, Hs = _dsgd_subepoch(Ws, Hs, R[:, s], C[:, s], V[:, s],
@@ -97,8 +101,9 @@ def _ccd_feature_pass(wl, hl, res_plus, rows, cols, lam_r, lam_c, inner=3):
 
 
 def ccdpp(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, inner=3,
-          seed=0, test=None, W0=None, H0=None):
-    """CCD++ with residual maintenance (feature-wise alternating CD)."""
+          seed=0, test=None, W0=None, H0=None, start_epoch=0):
+    """CCD++ with residual maintenance (feature-wise alternating CD).
+    ``start_epoch`` only offsets the trace's epoch labels (no schedule)."""
     rows = jnp.asarray(rows); cols = jnp.asarray(cols)
     vals = jnp.asarray(vals, jnp.float32)
     if W0 is None:
@@ -111,7 +116,7 @@ def ccdpp(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, inner=3,
                                       num_segments=n)
     res = vals - jnp.sum(W[rows] * H[cols], axis=-1)
     trace = []
-    for e in range(epochs):
+    for e in range(start_epoch, start_epoch + epochs):
         for l in range(k):
             wl, hl = W[:, l], H[:, l]
             res_plus = res + wl[rows] * hl[cols]
@@ -144,14 +149,14 @@ def _als_solve_side(H, rows, cols, vals, lam, m):
 
 
 def als(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, seed=0,
-        test=None, W0=None, H0=None):
+        test=None, W0=None, H0=None, start_epoch=0):
     rows = jnp.asarray(rows); cols = jnp.asarray(cols)
     vals = jnp.asarray(vals, jnp.float32)
     if W0 is None:
         W0, H0 = init_factors(jax.random.key(seed), m, n, k)
     W = jnp.asarray(W0); H = jnp.asarray(H0)
     trace = []
-    for e in range(epochs):
+    for e in range(start_epoch, start_epoch + epochs):
         W = _als_solve_side(H, rows, cols, vals, lam, m)
         H = _als_solve_side(W, cols, rows, vals, lam, n)
         if test is not None:
@@ -179,7 +184,10 @@ def _hogwild_minibatch(W, H, rows, cols, vals, lr, lam):
 
 def hogwild(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, batch=256,
             schedule: Optional[PowerSchedule] = None, seed=0, test=None,
-            W0=None, H0=None):
+            W0=None, H0=None, start_epoch=0):
+    """``start_epoch`` resumes the schedule; note the shuffle rng restarts
+    per call, so a warm-started run is statistically (not bitwise)
+    equivalent to an uninterrupted one."""
     schedule = schedule or PowerSchedule()
     rows_n = np.asarray(rows); cols_n = np.asarray(cols)
     vals_n = np.asarray(vals, np.float32)
@@ -190,7 +198,7 @@ def hogwild(rows, cols, vals, m, n, k, *, lam=0.05, epochs=10, batch=256,
     nnz = len(rows_n)
     nb = max(1, nnz // batch)
     trace = []
-    for e in range(epochs):
+    for e in range(start_epoch, start_epoch + epochs):
         lr = jnp.asarray(schedule(e), W.dtype)
         perm = rng.permutation(nnz)
         for b in range(nb):

@@ -16,12 +16,12 @@ Two executors share the same math:
   ``jnp.roll`` on the worker dimension.  Bitwise-identical results; used
   for tests and CPU runs.
 
-The per-block update is ``kernels.ops.block_sgd``.  ``impl`` selects the
-execution strategy: ``'xla'``/``'pallas'`` run the rating list strictly
-sequentially; ``'wave'``/``'wave_pallas'`` run the conflict-free
-wave-vectorized path (DESIGN.md §3) over the ``(n_waves, wave_width)``
-layout from ``partition.pack`` — the same serial ordering, executed
-~wave_width updates per step.
+The per-block update is ``kernels.ops.block_sgd`` driven by a
+``kernels.policy.KernelPolicy``: ``'xla'``/``'pallas'`` run the rating
+list strictly sequentially; ``'wave'``/``'wave_pallas'`` run the
+conflict-free wave-vectorized path (DESIGN.md §3) over the
+``(n_waves, wave_width)`` layout from ``partition.pack`` — the same serial
+ordering, executed ~wave_width updates per step.
 
 Overlap: with ``sub_blocks > 1`` the H block is split into sub-blocks whose
 permutes are issued as soon as each sub-block's updates finish, while the
@@ -32,11 +32,19 @@ collective-permute-start/done around the compute).  The per-sub-block
 rating lists are pre-partitioned at pack time (``BlockedRatings.sub_*``),
 so each sub-block processes only its own ratings instead of re-scanning
 the cell's full padded list with a mask.
+
+Per-epoch evaluation stays on device: ``train`` gathers test predictions
+directly from the ``(p, m_local, k)`` factor shards with a jit'd sharded
+RMSE, so no epoch transfers the factors to the host (the seed's
+``factors()`` round-trip).  The public entry point is
+``repro.api.solve(problem, NomadConfig(...))``; ``fit`` survives as a
+deprecation shim that forwards to it.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -45,21 +53,22 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import partition as part
-from .objective import rmse
 from .stepsize import PowerSchedule
 from ..compat import shard_map as _shard_map
 from ..kernels import ops as kops
+from ..kernels.policy import KernelPolicy
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _local_epoch(Ws, Hs, rows, cols, vals, mask, lr, lam, impl="xla"):
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _local_epoch(Ws, Hs, rows, cols, vals, mask, lr, lam,
+                 policy: KernelPolicy = KernelPolicy(impl="xla")):
     """Single-device ring-epoch emulation.
 
     Ws: (p, m_local, k)   Hs: (p, n_local, k) where Hs[q] is the block
     *currently held* by worker q.  rows/cols/vals/mask are indexed
     [worker, ring_step, ...]: flat (p, p, max_nnz) lists for the
-    sequential impls, (p, p, n_waves, wave_width) wave layouts for
-    impl='wave'/'wave_pallas'.
+    sequential impls, (p, p, n_waves, wave_width) wave layouts for the
+    wave impls.
     """
     p = Ws.shape[0]
 
@@ -68,7 +77,7 @@ def _local_epoch(Ws, Hs, rows, cols, vals, mask, lr, lam, impl="xla"):
         r, c, v, m = step_data  # each (p, max_nnz)
         Ws, Hs = jax.vmap(
             lambda W, H, rr, cc, vv, mm: kops.block_sgd(
-                W, H, rr, cc, vv, mm, lr, lam, impl=impl)
+                W, H, rr, cc, vv, mm, lr, lam, policy=policy)
         )(Ws, Hs, r, c, v, m)
         # ring permute: block held by q moves to q+1
         Hs = jnp.roll(Hs, 1, axis=0)
@@ -83,18 +92,20 @@ def _local_epoch(Ws, Hs, rows, cols, vals, mask, lr, lam, impl="xla"):
     return Ws, Hs
 
 
-def _spmd_epoch_fn(p: int, axis: str, lam: float, impl: str,
-                   sub_blocks: int = 1, sub_starts=None):
+def _spmd_epoch_fn(p: int, axis: str, lam: float, policy: KernelPolicy,
+                   sub_starts=None):
     """Per-shard epoch body for shard_map (one worker's view).
 
-    With ``sub_blocks > 1`` the rating arrays are the *pre-partitioned*
-    per-sub-block lists from ``partition.pack(..., sub_blocks=...)``
-    (shape ``(1, p, sub_blocks, sub_max_nnz)``, cols already localized to
-    the sub-block), so every sub-block touches only its own ratings —
-    the seed's masked re-scan of the full ``max_nnz`` list per sub-block
+    With ``policy.sub_blocks > 1`` the rating arrays are the
+    *pre-partitioned* per-sub-block lists from
+    ``partition.pack(..., sub_blocks=...)`` (shape
+    ``(1, p, sub_blocks, sub_max_nnz)``, cols already localized to the
+    sub-block), so every sub-block touches only its own ratings — the
+    seed's masked re-scan of the full ``max_nnz`` list per sub-block
     multiplied epoch compute by ``sub_blocks``.
     """
     perm = [(i, (i + 1) % p) for i in range(p)]
+    sub_blocks = policy.sub_blocks
 
     def epoch(W, Hblk, rows, cols, vals, mask, lr):
         # W: (1, m_local, k) -> squeeze; data: (1, p, ...)
@@ -106,7 +117,7 @@ def _spmd_epoch_fn(p: int, axis: str, lam: float, impl: str,
             r, c, v, m = step_data
             if sub_blocks == 1:
                 W, Hblk = kops.block_sgd(W, Hblk, r, c, v, m, lr, lam,
-                                         impl=impl)
+                                         policy=policy)
                 Hblk = jax.lax.ppermute(Hblk, axis, perm)
             else:
                 # r/c/v/m: (sub_blocks, sub_max_nnz).  Permute each
@@ -118,7 +129,8 @@ def _spmd_epoch_fn(p: int, axis: str, lam: float, impl: str,
                     hi = int(sub_starts[s + 1])
                     Hsub = Hblk[lo:hi]
                     W, Hsub = kops.block_sgd(
-                        W, Hsub, r[s], c[s], v[s], m[s], lr, lam, impl=impl)
+                        W, Hsub, r[s], c[s], v[s], m[s], lr, lam,
+                        policy=policy)
                     outs.append(jax.lax.ppermute(Hsub, axis, perm))
                 Hblk = jnp.concatenate(outs, axis=0)
             return (W, Hblk), ()
@@ -130,47 +142,50 @@ def _spmd_epoch_fn(p: int, axis: str, lam: float, impl: str,
     return epoch
 
 
+@jax.jit
+def _sharded_rmse(Ws, Hs, ridx, cidx, vals):
+    """Test RMSE straight off the (p, m_local, k)/(p, n_local, k) factor
+    shards.  ``ridx``/``cidx`` are flat shard indices
+    (owner * local_size + local), so the gather reads exactly the same
+    float values the unshard + full-matrix path would — no host
+    round-trip, and under a mesh XLA inserts the gather collective."""
+    k = Ws.shape[-1]
+    wi = Ws.reshape(-1, k)[ridx]
+    hj = Hs.reshape(-1, k)[cidx]
+    pred = jnp.sum(wi * hj, axis=-1)
+    return jnp.sqrt(jnp.mean((vals - pred) ** 2))
+
+
 @dataclasses.dataclass
 class NomadRingEngine:
-    """Driver: owns the packed blocks and the factor shards."""
+    """Internal executor behind ``repro.api.solve``: owns the packed
+    blocks and the factor shards.  (Direct construction still works and
+    is what the distributed tests do.)"""
     br: part.BlockedRatings
     k: int
     lam: float
     schedule: PowerSchedule
-    impl: str = "xla"         # 'xla' | 'pallas' | 'auto' | 'wave' | 'wave_pallas'
+    impl: str = "xla"         # legacy: 'xla'|'pallas'|'auto'|'wave'|'wave_pallas'
     sub_blocks: int = 1
     mesh: Optional[Mesh] = None    # if given, run shard_map on axis 'workers'
+    policy: Optional[KernelPolicy] = None  # overrides impl/sub_blocks
 
     def __post_init__(self):
         br = self.br
-        wave = self.impl in ("wave", "wave_pallas")
-        if wave and br.wave_rows is None:
-            raise ValueError(
-                f"impl={self.impl!r} needs the wave layout; call "
-                "partition.pack(..., waves=True)")
-        if wave and self.sub_blocks > 1:
-            raise NotImplementedError(
-                "wave impls do not support sub_blocks > 1 yet; use "
-                "impl='xla'/'pallas' for the pipelined SPMD path")
-        if self.sub_blocks > 1 and self.mesh is not None:
-            # sub-block pipelining only affects the SPMD path; the local
-            # emulator runs whole cells (matching seed behaviour)
-            if br.sub_blocks != self.sub_blocks:
-                raise ValueError(
-                    f"engine sub_blocks={self.sub_blocks} but ratings were "
-                    f"packed with sub_blocks={br.sub_blocks}; call "
-                    "partition.pack(..., sub_blocks=...) to match")
-            src = (br.sub_rows, br.sub_cols, br.sub_vals, br.sub_mask)
-        elif wave:
-            src = (br.wave_rows, br.wave_cols, br.wave_vals, br.wave_mask)
+        if self.policy is None:
+            self.policy = KernelPolicy.coerce(self.impl,
+                                              sub_blocks=self.sub_blocks)
         else:
-            src = (br.rows, br.cols, br.vals, br.mask)
+            self.impl = self.policy.impl
+            self.sub_blocks = self.policy.sub_blocks
+        policy = self.policy
+        src = policy.cell_arrays(br, pipelined=self.mesh is not None)
         self.rows, self.cols, self.vals, self.mask = map(jnp.asarray, src)
         self.epoch_idx = 0
+        self._eval_cache = None
         if self.mesh is not None:
             axis = self.mesh.axis_names[0]
-            fn = _spmd_epoch_fn(br.p, axis, self.lam, self.impl,
-                                self.sub_blocks, br.sub_starts)
+            fn = _spmd_epoch_fn(br.p, axis, self.lam, policy, br.sub_starts)
             pspec = P(axis)
             self._spmd_epoch = jax.jit(_shard_map(
                 fn, mesh=self.mesh,
@@ -197,7 +212,7 @@ class NomadRingEngine:
         if self.mesh is None:
             self.Ws, self.Hs = _local_epoch(
                 self.Ws, self.Hs, self.rows, self.cols, self.vals,
-                self.mask, lr, lam, impl=self.impl)
+                self.mask, lr, lam, policy=self.policy)
         else:
             self.Ws, self.Hs = self._spmd_epoch(
                 self.Ws, self.Hs, self.rows, self.cols, self.vals,
@@ -208,40 +223,75 @@ class NomadRingEngine:
         return part.unshard_factors(np.asarray(self.Ws), np.asarray(self.Hs),
                                     self.br)
 
+    # ------------------------------------------------------------------ #
+    def _eval_args(self, test):
+        """Device-resident (ridx, cidx, vals) for the sharded RMSE;
+        memoized per test set so train() pays the host->device copy of
+        the (small) index arrays once, not per epoch."""
+        if self._eval_cache is not None and self._eval_cache[0] is test:
+            return self._eval_cache[1]
+        br = self.br
+        rows = np.asarray(test[0])
+        cols = np.asarray(test[1])
+        ridx = (br.row_owner[rows].astype(np.int64) * br.m_local
+                + br.row_local[rows])
+        cidx = (br.col_block[cols].astype(np.int64) * br.n_local
+                + br.col_local[cols])
+        args = (jnp.asarray(ridx), jnp.asarray(cidx),
+                jnp.asarray(np.asarray(test[2]), jnp.float32))
+        if self.mesh is not None:
+            rep = NamedSharding(self.mesh, P())
+            args = tuple(jax.device_put(a, rep) for a in args)
+        self._eval_cache = (test, args)
+        return args
+
+    def eval_rmse(self, test) -> float:
+        """Test RMSE without leaving the device (no factors() round-trip).
+
+        At epoch boundaries every nomadic H block is back home (p ring
+        permutes = identity), so shard q holds exactly block q and the
+        flat-index gather reads the same values as the unsharded matrix.
+        """
+        ridx, cidx, vals = self._eval_args(test)
+        return float(_sharded_rmse(self.Ws, self.Hs, ridx, cidx, vals))
+
     def train(self, epochs: int, test=None, verbose=False):
         trace = []
         for _ in range(epochs):
             self.run_epoch()
             if test is not None:
-                W, H = self.factors()
-                r = float(rmse(jnp.asarray(W), jnp.asarray(H),
-                               jnp.asarray(test[0]), jnp.asarray(test[1]),
-                               jnp.asarray(test[2])))
+                r = self.eval_rmse(test)
                 trace.append((self.epoch_idx, r))
                 if verbose:
                     print(f"epoch {self.epoch_idx}: test rmse {r:.4f}")
         return trace
 
 
+_fit_deprecation_warned = False
+
+
 def fit(rows, cols, vals, m, n, k, p, *, lam=0.05,
         schedule: Optional[PowerSchedule] = None, epochs=10, seed=0,
         test=None, mesh=None, impl="xla", balanced=True, sub_blocks=1,
         verbose=False):
-    """One-call NOMAD matrix completion (the public API used in examples).
+    """Deprecated one-call NOMAD matrix completion.
 
-    ``impl='wave'`` (or ``'wave_pallas'``) selects the conflict-free
-    wave-vectorized kernel path — identical serial semantics, ~10-15x
-    higher CPU throughput on the block update (see DESIGN.md §3).
+    Thin shim over ``repro.api.solve(problem, NomadConfig(...))`` — same
+    arguments, bitwise-identical ``(W, H, trace)``.  New code should build
+    an ``MCProblem`` and call ``solve`` (which also returns timings and a
+    resumable ``FitResult``).
     """
-    from .objective import init_factors
-    schedule = schedule or PowerSchedule()
-    wave = impl in ("wave", "wave_pallas")
-    br = part.pack(rows, cols, vals, m, n, p, balanced=balanced,
-                   waves=wave, sub_blocks=sub_blocks)
-    eng = NomadRingEngine(br=br, k=k, lam=lam, schedule=schedule, impl=impl,
-                          sub_blocks=sub_blocks, mesh=mesh)
-    W0, H0 = init_factors(jax.random.key(seed), m, n, k)
-    eng.init_factors(np.asarray(W0), np.asarray(H0))
-    trace = eng.train(epochs, test=test, verbose=verbose)
-    W, H = eng.factors()
-    return W, H, trace
+    global _fit_deprecation_warned
+    if not _fit_deprecation_warned:
+        warnings.warn(
+            "nomad.fit() is deprecated; use repro.api.solve(problem, "
+            "NomadConfig(...)) instead", DeprecationWarning, stacklevel=2)
+        _fit_deprecation_warned = True
+    from ..api import MCProblem, NomadConfig, solve
+    problem = MCProblem(rows=rows, cols=cols, vals=vals, m=m, n=n,
+                        test=test)
+    config = NomadConfig(k=k, lam=lam, epochs=epochs, seed=seed,
+                         schedule=schedule, p=p, kernel=impl,
+                         balanced=balanced, sub_blocks=sub_blocks)
+    res = solve(problem, config, mesh=mesh, verbose=verbose)
+    return res.W, res.H, res.trace

@@ -7,36 +7,68 @@ does not lower on the CPU backend) and whenever ``impl='xla'``.
 """
 from __future__ import annotations
 
+from typing import Optional, Union
+
 import jax
 
 from . import ref
 from .nomad_sgd import nomad_sgd_block, nomad_sgd_waves_block
+from .policy import KernelPolicy
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *, impl: str = "auto",
-              chunk: int = 1024, wave_chunk: int = 8):
-    """NOMAD block SGD update.
+def _run_wave(W, H, rows, cols, vals, mask, lr, lam, policy):
+    return ref.block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam)
 
-    impl in {'auto', 'pallas', 'xla', 'wave', 'wave_pallas'}.  For the
-    sequential impls rows/cols/vals/mask are flat ``(nnz,)`` rating lists;
-    for the wave impls they are the conflict-free ``(n_waves, wave_width)``
-    layouts emitted by ``partition.pack`` (same serial ordering, vectorized
-    execution — see DESIGN.md §3).
-    """
-    if impl == "wave":
-        return ref.block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam)
-    if impl == "wave_pallas":
-        return nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam,
-                                     wave_chunk=wave_chunk,
-                                     interpret=not on_tpu())
-    if impl == "xla" or (impl == "auto" and not on_tpu()):
-        return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam)
+
+def _run_wave_pallas(W, H, rows, cols, vals, mask, lr, lam, policy):
+    return nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam,
+                                 wave_chunk=policy.wave_chunk,
+                                 interpret=not on_tpu())
+
+
+def _run_xla(W, H, rows, cols, vals, mask, lr, lam, policy):
+    return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam)
+
+
+def _run_pallas(W, H, rows, cols, vals, mask, lr, lam, policy):
     return nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam,
-                           chunk=chunk, interpret=not on_tpu())
+                           chunk=policy.chunk, interpret=not on_tpu())
+
+
+_DISPATCH = {
+    "wave": _run_wave,
+    "wave_pallas": _run_wave_pallas,
+    "xla": _run_xla,
+    "pallas": _run_pallas,
+}
+
+
+def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *,
+              policy: Optional[Union[KernelPolicy, str]] = None,
+              impl: str = "auto", chunk: int = 1024, wave_chunk: int = 8):
+    """NOMAD block SGD update, dispatched through a :class:`KernelPolicy`.
+
+    Callers pass either ``policy=KernelPolicy(...)`` (preferred — validated
+    at construction) or the legacy ``impl``/``chunk``/``wave_chunk``
+    kwargs, which are coerced into a policy here.  For the sequential
+    impls rows/cols/vals/mask are flat ``(nnz,)`` rating lists; for the
+    wave impls they are the conflict-free ``(n_waves, wave_width)``
+    layouts emitted by ``partition.pack`` (same serial ordering,
+    vectorized execution — see DESIGN.md §3).
+    """
+    if policy is None:
+        policy = KernelPolicy(impl=impl, chunk=chunk, wave_chunk=wave_chunk)
+    elif isinstance(policy, str):
+        policy = KernelPolicy(impl=policy, chunk=chunk,
+                              wave_chunk=wave_chunk)
+    name = policy.impl
+    if name == "auto":
+        name = "pallas" if on_tpu() else "xla"
+    return _DISPATCH[name](W, H, rows, cols, vals, mask, lr, lam, policy)
 
 
 def flash_attention(q, k, v, *, causal=True, impl: str = "auto",

@@ -1,0 +1,113 @@
+"""Kernel execution policy for the NOMAD block-SGD update.
+
+``KernelPolicy`` is the single, validated description of *how* a block of
+ratings is executed: which kernel implementation, its tiling knobs, and
+the sub-block pipelining factor.  It replaces the string-``impl``
+branching that used to be re-validated ad hoc in ``kernels.ops``,
+``NomadRingEngine.__post_init__`` and every launcher: invalid
+combinations (e.g. a wave kernel with ``sub_blocks > 1``) now fail at
+*construction* time, once, with one error message.
+
+The object is a frozen (hashable) dataclass, so it can be passed through
+``jax.jit`` as a static argument and used as a memoization key for packed
+layouts (``MCProblem.packed``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+IMPLS: Tuple[str, ...] = ("auto", "xla", "pallas", "wave", "wave_pallas")
+
+#: impls that consume the conflict-free ``(n_waves, wave_width)`` layout
+WAVE_IMPLS: Tuple[str, ...] = ("wave", "wave_pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """How one block-SGD update executes.
+
+    impl        -- 'auto' | 'xla' | 'pallas' | 'wave' | 'wave_pallas'
+                   (sequential rating list vs. conflict-free wave layout,
+                   XLA vs. Pallas lowering; see DESIGN.md §3)
+    chunk       -- rating chunk for the sequential Pallas kernel
+    wave_chunk  -- wave chunk for the wave Pallas kernel
+    sub_blocks  -- item sub-blocks per H block for the pipelined SPMD
+                   permute overlap (DESIGN.md §2); 1 = whole-block
+    """
+    impl: str = "auto"
+    chunk: int = 1024
+    wave_chunk: int = 8
+    sub_blocks: int = 1
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(
+                f"impl={self.impl!r} not in {IMPLS}")
+        if self.chunk < 1 or self.wave_chunk < 1:
+            raise ValueError("chunk and wave_chunk must be >= 1")
+        if self.sub_blocks < 1:
+            raise ValueError(f"sub_blocks must be >= 1, got {self.sub_blocks}")
+        if self.wave and self.sub_blocks > 1:
+            raise ValueError(
+                f"impl={self.impl!r} does not support sub_blocks > 1 yet; "
+                "use impl='xla'/'pallas' for the pipelined SPMD path")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def wave(self) -> bool:
+        """True if this policy consumes the wave layout."""
+        return self.impl in WAVE_IMPLS
+
+    @classmethod
+    def coerce(cls, value: Union[str, "KernelPolicy", None], *,
+               sub_blocks: int = 1) -> "KernelPolicy":
+        """Build a policy from a legacy ``impl`` string (or pass one
+        through).  ``sub_blocks`` merges in when the value is a string or
+        when the given policy still has the default of 1; a *conflicting*
+        explicit pair fails here rather than silently preferring one."""
+        if value is None:
+            value = "auto"
+        if isinstance(value, str):
+            return cls(impl=value, sub_blocks=sub_blocks)
+        if isinstance(value, KernelPolicy):
+            if sub_blocks == 1 or sub_blocks == value.sub_blocks:
+                return value
+            if value.sub_blocks == 1:
+                return dataclasses.replace(value, sub_blocks=sub_blocks)
+            raise ValueError(
+                f"conflicting sub_blocks: policy says "
+                f"{value.sub_blocks}, caller says {sub_blocks}")
+        raise TypeError(f"cannot coerce {type(value).__name__} to "
+                        "KernelPolicy")
+
+    # ------------------------------------------------------------------ #
+    def check_packed(self, br, *, pipelined: bool = True) -> None:
+        """Validate that a ``BlockedRatings`` carries the layouts this
+        policy executes (wave layout present, sub-block pre-partition
+        matching).  Raises ``ValueError`` with an actionable message."""
+        if self.wave and br.wave_rows is None:
+            raise ValueError(
+                f"impl={self.impl!r} needs the wave layout; call "
+                "partition.pack(..., waves=True) or "
+                "MCProblem.packed(..., waves=True)")
+        if (pipelined and self.sub_blocks > 1
+                and br.sub_blocks != self.sub_blocks):
+            raise ValueError(
+                f"policy sub_blocks={self.sub_blocks} but ratings were "
+                f"packed with sub_blocks={br.sub_blocks}; call "
+                "partition.pack(..., sub_blocks=...) to match")
+
+    def cell_arrays(self, br, *, pipelined: bool):
+        """Select the rating arrays this policy consumes from a packed
+        ``BlockedRatings``: the pre-partitioned per-sub-block lists when
+        the pipelined SPMD path is active, the wave layout for wave
+        impls, the flat sequential lists otherwise (sub-block pipelining
+        only exists on the SPMD path; the local emulator runs whole
+        cells, matching seed behaviour)."""
+        self.check_packed(br, pipelined=pipelined)
+        if pipelined and self.sub_blocks > 1:
+            return br.sub_rows, br.sub_cols, br.sub_vals, br.sub_mask
+        if self.wave:
+            return br.wave_rows, br.wave_cols, br.wave_vals, br.wave_mask
+        return br.rows, br.cols, br.vals, br.mask

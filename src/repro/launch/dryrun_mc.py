@@ -27,6 +27,7 @@ from .. import compat                       # noqa: E402
 from ..configs import nomad_mf              # noqa: E402
 from ..core.nomad import _spmd_epoch_fn     # noqa: E402
 from ..core.partition import sub_block_starts  # noqa: E402
+from ..kernels.policy import KernelPolicy   # noqa: E402
 from .hlo_analysis import collective_summary  # noqa: E402
 from .mesh import make_mc_mesh              # noqa: E402
 from .dryrun import ARTIFACT_DIR            # noqa: E402
@@ -67,25 +68,32 @@ def mc_cell_specs(cfg: nomad_mf.MFConfig, p: int, mesh,
 
 
 def run_mc_cell(dataset: str, multi_pod: bool, sub_blocks: int = 1,
-                tag: str = "", save_hlo: bool = False) -> dict:
+                tag: str = "", save_hlo: bool = False,
+                impl: str = "xla") -> dict:
     cfg = {"netflix": nomad_mf.NETFLIX, "yahoo": nomad_mf.YAHOO,
            "hugewiki": nomad_mf.HUGEWIKI}[dataset]
     p = 512 if multi_pod else 256
     mesh = make_mc_mesh(p)
-    epoch_fn = _spmd_epoch_fn(p, "workers", cfg.lam, "xla",
-                              sub_blocks=sub_blocks,
+    if impl not in ("xla", "pallas"):
+        raise ValueError(
+            f"dry-run models the sequential impls only, got {impl!r} "
+            "(the wave layout's shape is data-dependent)")
+    policy = KernelPolicy(impl=impl, sub_blocks=sub_blocks)
+    epoch_fn = _spmd_epoch_fn(p, "workers", cfg.lam, policy,
                               sub_starts=sub_block_starts(-(-cfg.n // p),
                                                           sub_blocks))
     pspec = P("workers")
+    # check_vma off: pallas_call has no replication rule under shard_map,
+    # and the dry-run only lowers/compiles (no numerics to protect)
     fn = compat.shard_map(
         epoch_fn, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec, pspec, pspec, P()),
-        out_specs=(pspec, pspec))
+        out_specs=(pspec, pspec), check_vma=False)
     sds, max_nnz = mc_cell_specs(cfg, p, mesh, sub_blocks)
     rec = {"arch": f"nomad_mc_{dataset}", "shape": f"epoch_p{p}",
            "mesh": "ring512" if multi_pod else "ring256",
-           "kind": "mc_epoch", "tag": tag, "sub_blocks": sub_blocks,
-           "max_nnz_per_cell": max_nnz}
+           "kind": "mc_epoch", "tag": tag, "impl": impl,
+           "sub_blocks": sub_blocks, "max_nnz_per_cell": max_nnz}
     t0 = time.time()
     lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(*sds)
     compiled = lowered.compile()
@@ -130,6 +138,10 @@ def main():
                     choices=["netflix", "yahoo", "hugewiki", "all"])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--sub-blocks", type=int, default=1)
+    # wave impls are excluded: their (n_waves, wave_width) layout is
+    # data-dependent (wave count tracks the max row/col degree per cell),
+    # which a shape-only dry-run cannot model honestly
+    ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--tag", default="")
     ap.add_argument("--save-hlo", action="store_true")
     args = ap.parse_args()
@@ -137,7 +149,8 @@ def main():
              else [args.dataset])
     for name in names:
         rec = run_mc_cell(name, args.multi_pod, args.sub_blocks,
-                          tag=args.tag, save_hlo=args.save_hlo)
+                          tag=args.tag, save_hlo=args.save_hlo,
+                          impl=args.impl)
         print(f"OK nomad_mc/{name} p{512 if args.multi_pod else 256} "
               f"sub{args.sub_blocks}: compile {rec['compile_s']}s, "
               f"wire {rec['collectives']['wire_bytes_per_device']/1e6:.2f}"

@@ -1,0 +1,242 @@
+"""The one-front-door API: solve(problem, config) dispatches every solver
+through the registry, the nomad.fit shim is bitwise-faithful, validation
+fails at construction time, and per-epoch eval stays on device."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import nomad, objective, partition
+from repro.core.stepsize import PowerSchedule
+
+
+@pytest.fixture(scope="module")
+def problem(tiny_mc_problem):
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    return api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                         n=pr["n"], test=pr["test"])
+
+
+# --------------------------------------------------------------------- #
+# fit shim == solve, bitwise                                             #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+def test_fit_shim_bitwise_equals_solve(problem, tiny_mc_problem, impl):
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    sched = PowerSchedule(alpha=0.05, beta=0.02)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        W1, H1, tr1 = nomad.fit(rows, cols, vals, pr["m"], pr["n"],
+                                pr["k"], p=4, lam=0.01, schedule=sched,
+                                epochs=4, test=pr["test"], impl=impl)
+    res = api.solve(problem, api.NomadConfig(
+        k=pr["k"], lam=0.01, epochs=4, seed=0, schedule=sched, p=4,
+        kernel=impl))
+    assert np.array_equal(W1, res.W)
+    assert np.array_equal(H1, res.H)
+    assert tr1 == res.trace
+
+
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+def test_on_device_eval_matches_legacy_host_eval(problem, impl):
+    """The jit'd sharded RMSE must reproduce the seed's unshard +
+    full-matrix host evaluation bit for bit (same float values gathered,
+    same reduction shapes)."""
+    import jax
+    import jax.numpy as jnp
+    res = api.solve(problem, api.NomadConfig(
+        k=8, lam=0.01, epochs=3, seed=0, p=4, kernel=impl,
+        schedule=PowerSchedule(alpha=0.05, beta=0.02)))
+    # replay the legacy host-side eval on the same factor stream
+    br = problem.packed(4, waves=(impl == "wave"))
+    eng = nomad.NomadRingEngine(br=br, k=8, lam=0.01, impl=impl,
+                                schedule=PowerSchedule(alpha=0.05,
+                                                       beta=0.02))
+    W0, H0 = objective.init_factors(jax.random.key(0), problem.m,
+                                    problem.n, 8)
+    eng.init_factors(np.asarray(W0), np.asarray(H0))
+    legacy = []
+    for _ in range(3):
+        eng.run_epoch()
+        W, H = eng.factors()
+        legacy.append(float(objective.rmse(
+            jnp.asarray(W), jnp.asarray(H),
+            jnp.asarray(problem.test[0]), jnp.asarray(problem.test[1]),
+            jnp.asarray(problem.test[2]))))
+    assert res.trace_rmse.tolist() == legacy
+
+
+def test_fit_emits_deprecation_warning_exactly_once(tiny_mc_problem):
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    nomad._fit_deprecation_warned = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for _ in range(2):
+            nomad.fit(rows, cols, vals, pr["m"], pr["n"], pr["k"], p=2,
+                      epochs=1)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and "nomad.fit" in str(x.message)]
+    assert len(dep) == 1
+
+
+# --------------------------------------------------------------------- #
+# registry round-trip over every solver                                  #
+# --------------------------------------------------------------------- #
+
+def test_registry_covers_all_solvers():
+    assert api.solver_names() == ["als", "async_sim", "ccdpp", "dsgd",
+                                  "hogwild", "nomad"]
+
+
+@pytest.mark.parametrize("name", ["als", "async_sim", "ccdpp", "dsgd",
+                                  "hogwild", "nomad"])
+def test_registry_round_trip(problem, name):
+    cfg_cls = api.config_for(name)
+    cfg = cfg_cls(k=8, lam=0.01, epochs=2, seed=0,
+                  schedule=PowerSchedule(alpha=0.05, beta=0.02))
+    res = api.solve(problem, cfg)
+    assert res.solver == name
+    assert res.config is cfg
+    assert res.W.shape == (problem.m, 8)
+    assert res.H.shape == (problem.n, 8)
+    assert len(res.trace_rmse) > 0
+    assert np.all(np.isfinite(res.trace_rmse))
+    assert res.wall_time > 0
+    # test RMSE beats the random-init baseline after 2 epochs
+    W0, H0 = objective.init_factors_np(0, problem.m, problem.n, 8)
+    base = objective.rmse_np(W0, H0, *problem.test)
+    assert res.trace_rmse[-1] < base
+    if name == "async_sim":
+        assert res.virtual_time is not None and res.virtual_time > 0
+        assert res.extras["n_updates"] > 0
+
+
+def test_unknown_solver_name_and_config():
+    with pytest.raises(KeyError, match="no solver named"):
+        api.config_for("sgd_but_wrong")
+
+    @dataclasses.dataclass(frozen=True)
+    class Unregistered(api.SolverConfig):
+        pass
+    # subclassing a registered config still dispatches via mro; a config
+    # rooted directly at SolverConfig does not
+    prob = api.MCProblem(rows=[0], cols=[0], vals=[1.0], m=2, n=2)
+    with pytest.raises(KeyError, match="no solver registered"):
+        api.solve(prob, Unregistered())
+
+
+# --------------------------------------------------------------------- #
+# construction-time validation                                           #
+# --------------------------------------------------------------------- #
+
+def test_kernel_policy_validates_at_construction():
+    with pytest.raises(ValueError, match="sub_blocks"):
+        api.KernelPolicy(impl="wave", sub_blocks=2)
+    with pytest.raises(ValueError, match="sub_blocks"):
+        api.NomadConfig(kernel="wave_pallas", sub_blocks=4)
+    with pytest.raises(ValueError, match="impl"):
+        api.KernelPolicy(impl="cuda")
+    with pytest.raises(ValueError, match="mode"):
+        api.AsyncSimConfig(mode="bulk")
+    with pytest.raises(ValueError, match="speed"):
+        api.AsyncSimConfig(p=4, speed=(1.0, 2.0))
+    with pytest.raises(ValueError, match="epochs"):
+        api.NomadConfig(epochs=-1)
+    # fractional epochs only exist for the simulator's virtual clock
+    with pytest.raises(ValueError, match="integral"):
+        api.NomadConfig(epochs=2.5)
+    assert api.AsyncSimConfig(epochs=2.5).epochs == 2.5
+    # an explicit policy and a conflicting explicit sub_blocks must not
+    # silently prefer one of the two
+    with pytest.raises(ValueError, match="conflicting sub_blocks"):
+        api.NomadConfig(kernel=api.KernelPolicy(impl="xla", sub_blocks=2),
+                        sub_blocks=4)
+    assert api.NomadConfig(kernel=api.KernelPolicy(impl="xla",
+                                                   sub_blocks=2),
+                           sub_blocks=2).sub_blocks == 2
+
+
+def test_problem_validates_index_bounds_at_construction():
+    with pytest.raises(ValueError, match="train.*out of range"):
+        api.MCProblem(rows=[-1], cols=[0], vals=[1.0], m=2, n=2)
+    with pytest.raises(ValueError, match="test.*out of range"):
+        api.MCProblem(rows=[0], cols=[0], vals=[1.0], m=2, n=2,
+                      test=([2], [0], [1.0]))
+
+
+def test_problem_preserves_input_dtypes():
+    prob = api.MCProblem(rows=np.array([0, 1], np.int32),
+                         cols=np.array([0, 1], np.int32),
+                         vals=np.array([1.0, 2.0], np.float32), m=2, n=2)
+    assert prob.rows.dtype == np.int32
+    assert prob.vals.dtype == np.float32
+    listy = api.MCProblem(rows=[0, 1], cols=[0, 1], vals=[1.0, 2.0],
+                          m=2, n=2)
+    assert listy.rows.dtype == np.int64
+    assert listy.vals.dtype == np.float64
+
+
+def test_missing_wave_layout_raises_at_engine_construction(problem):
+    br = problem.packed(2, waves=False)
+    with pytest.raises(ValueError, match="wave layout"):
+        nomad.NomadRingEngine(br=br, k=4, lam=0.01,
+                              schedule=PowerSchedule(), impl="wave")
+
+
+def test_problem_is_immutable(problem):
+    with pytest.raises(ValueError):
+        problem.rows[0] = 3
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        problem.m = 7
+
+
+def test_problem_pack_is_memoized(problem):
+    a = problem.packed(4, waves=True)
+    b = problem.packed(4, waves=True)
+    assert a is b
+    c = problem.packed(4, waves=False)
+    assert c is not a
+
+
+# --------------------------------------------------------------------- #
+# warm start                                                             #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ["nomad", "dsgd", "als"])
+def test_warm_start_is_bitwise_resume(problem, name):
+    """3 + 3 epochs via warm_start == 6 epochs in one call (the schedule
+    continues from epochs_done, so the split changes nothing; ALS has no
+    schedule and each epoch depends only on the factors, so it splits
+    bitwise too)."""
+    cfg_cls = api.config_for(name)
+    mk = lambda e: cfg_cls(k=8, lam=0.01, epochs=e, seed=0,
+                           schedule=PowerSchedule(alpha=0.05, beta=0.02))
+    full = api.solve(problem, mk(6))
+    half = api.solve(problem, mk(3))
+    resumed = api.solve(problem, mk(3), warm_start=half)
+    assert np.array_equal(full.W, resumed.W)
+    assert np.array_equal(full.H, resumed.H)
+    assert resumed.epochs_done == 6
+    assert half.trace + resumed.trace == full.trace
+
+
+@pytest.mark.parametrize("name", ["ccdpp", "hogwild", "async_sim"])
+def test_warm_start_trace_epochs_continue(problem, name):
+    """Solvers that resume only statistically must still label resumed
+    trace epochs after the warm start's, so concatenated traces stay
+    monotone (what examples/train_mc.py prints)."""
+    cfg_cls = api.config_for(name)
+    cfg = cfg_cls(k=8, lam=0.01, epochs=2, seed=0,
+                  schedule=PowerSchedule(alpha=0.05, beta=0.02))
+    half = api.solve(problem, cfg)
+    resumed = api.solve(problem, cfg, warm_start=half)
+    joint = np.concatenate([half.trace_epochs, resumed.trace_epochs])
+    assert np.all(np.diff(joint.astype(np.float64)) > 0)
+    assert resumed.epochs_done == pytest.approx(2 * half.epochs_done,
+                                                rel=0.3)
