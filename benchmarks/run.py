@@ -64,6 +64,7 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
+    from . import stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -78,6 +79,7 @@ def main() -> None:
         ("fig14", paper_figs.fig14_rank),
         ("kernel", kernel_bench.kernel_rows),
         ("solver", solver_bench.solver_rows),
+        ("stream", stream_bench.stream_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -90,7 +92,7 @@ def main() -> None:
             rows = fn()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
-            if name in ("kernel", "solver"):
+            if name in ("kernel", "solver", "stream"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

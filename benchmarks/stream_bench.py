@@ -1,0 +1,82 @@
+"""Streaming re-pack latency: incremental ``repack_delta`` vs a
+from-scratch ``pack`` of the extended problem.
+
+The greedy wave coloring is the only O(nnz) *sequential* (pure-Python)
+part of packing, and ``repack_delta`` re-runs it only for cells that
+receive new ratings — every untouched cell's sequence is copied
+verbatim.  So the win scales with the fraction of the p x p grid the
+delta leaves untouched:
+
+* a *scattered* batch (uniform rows x cols) hits every cell, so the
+  incremental path can only match the full re-pack (parity row);
+* a *localized* batch (ratings concentrated on one item block — the
+  bursty, power-law arrival pattern real rating streams show) leaves
+  (p-1)/p of the grid untouched and wins roughly p-fold on coloring.
+
+Both paths emit bitwise-equal layouts (asserted here; property-tested in
+tests/test_streaming.py), so the speedup is free.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import partition as part
+from repro.data import RatingArrivalStream
+from .common import timed
+
+
+def _setup(nnz0: int, p: int):
+    stream = RatingArrivalStream(
+        m0=max(200, nnz0 // 40), n0=max(80, nnz0 // 160), nnz0=nnz0,
+        batches=1, nnz_batch=1, k=8, seed=0, test_frac=0.0)
+    base = stream.initial_problem()
+    br0 = part.pack(base.rows, base.cols, base.vals, base.m, base.n, p)
+    return base, br0
+
+
+def _batch(base, br0, nnz_batch: int, localized: bool, m_new=16, n_new=4):
+    """An arrival batch over the extended dims; ``localized`` confines the
+    new ratings' columns to item block 0 (one grid column of cells)."""
+    rng = np.random.default_rng(7)
+    m, n = base.m + m_new, base.n + n_new
+    rows = rng.integers(0, base.m, nnz_batch)
+    if localized:
+        blk = br0.col_of[0]
+        cols = rng.choice(blk[blk >= 0], nnz_batch)
+    else:
+        cols = rng.integers(0, base.n, nnz_batch)
+    return rows, cols, rng.normal(size=nnz_batch), m, n
+
+
+def stream_rows() -> list:
+    out = []
+    p = 8
+    for nnz0, nnz_batch, localized in ((200_000, 2000, False),
+                                       (200_000, 2000, True),
+                                       (400_000, 2000, True)):
+        base, br0 = _setup(nnz0, p)
+        nr, nc, nv, m, n = _batch(base, br0, nnz_batch, localized)
+
+        inc = part.repack_delta(br0, base.rows, base.cols, base.vals,
+                                nr, nc, nv, m, n)
+        ext = (np.concatenate([base.rows, nr]),
+               np.concatenate([base.cols, nc]),
+               np.concatenate([base.vals, nv]))
+        full = part.pack(*ext, m, n, p, row_owner=inc.row_owner,
+                         col_block=inc.col_block)
+        assert np.array_equal(inc.ring_order(), full.ring_order())
+        assert np.array_equal(inc.wave_gid, full.wave_gid)
+
+        _, us_inc = timed(lambda: part.repack_delta(
+            br0, base.rows, base.cols, base.vals, nr, nc, nv, m, n),
+            repeat=3)
+        _, us_full = timed(lambda: part.pack(
+            *ext, m, n, p, row_owner=inc.row_owner,
+            col_block=inc.col_block), repeat=3)
+
+        kind = "localized" if localized else "scattered"
+        tag = f"{nnz0 // 1000}k_plus_{nnz_batch}_{kind}"
+        ratio = us_full / max(us_inc, 1e-9)
+        out.append((f"stream/repack_delta_{tag}", us_inc,
+                    f"full_us={us_full:.0f} speedup={ratio:.2f}"))
+    return out

@@ -44,10 +44,12 @@ from .core.stepsize import PowerSchedule
 from .kernels.policy import KernelPolicy
 
 __all__ = [
-    "MCProblem", "SolverConfig", "NomadConfig", "DsgdConfig", "CcdConfig",
-    "AlsConfig", "HogwildConfig", "AsyncSimConfig", "FitResult",
-    "KernelPolicy", "solve", "register_solver", "solver_names",
-    "config_for",
+    "MCProblem", "ProblemDelta", "SolverConfig", "NomadConfig",
+    "DsgdConfig", "CcdConfig", "AlsConfig", "HogwildConfig",
+    "AsyncSimConfig", "FitResult", "KernelPolicy", "solve",
+    "register_solver", "solver_names", "config_for", "partial_fit",
+    "register_partial_fit", "supports_partial_fit",
+    "streaming_solver_names", "StreamingSession",
 ]
 
 
@@ -93,6 +95,12 @@ class MCProblem:
     test: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
     val: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
     dtype: Any = np.float32
+    #: optional explicit partition maps (row -> worker, col -> item block)
+    #: honored by :meth:`packed`; the streaming layer pins these to the
+    #: sticky assignment an incremental re-pack keeps, so a batch refit of
+    #: an extended problem executes the identical serial order
+    row_assign: Optional[np.ndarray] = None
+    col_assign: Optional[np.ndarray] = None
 
     def __post_init__(self):
         r, c, v = _frozen_coo(self.rows, self.cols, self.vals)
@@ -106,6 +114,16 @@ class MCProblem:
                 split = _frozen_coo(*split)
                 self._check_bounds(name, split[0], split[1])
                 object.__setattr__(self, name, split)
+        for name, count in (("row_assign", self.m), ("col_assign", self.n)):
+            assign = getattr(self, name)
+            if assign is not None:
+                assign = np.array(assign, dtype=np.int32, copy=True)
+                if assign.shape != (count,):
+                    raise ValueError(
+                        f"{name} must have shape ({count},), got "
+                        f"{assign.shape}")
+                assign.flags.writeable = False
+                object.__setattr__(self, name, assign)
         object.__setattr__(self, "_pack_cache", {})
 
     def _check_bounds(self, which, r, c):
@@ -126,18 +144,38 @@ class MCProblem:
     def train(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         return self.rows, self.cols, self.vals
 
+    @staticmethod
+    def _pack_key(p, balanced, waves, wave_width, sub_blocks):
+        """The memo-cache key of :meth:`packed` — also used by the
+        streaming layer to pre-seed an extended problem's cache with the
+        incrementally re-packed layout."""
+        return (p, balanced, waves, wave_width, sub_blocks)
+
     def packed(self, p: int, *, balanced: bool = True, waves: bool = False,
                wave_width: Optional[int] = None,
                sub_blocks: int = 1) -> part.BlockedRatings:
         """Memoized ``partition.pack`` of the training ratings."""
-        key = (p, balanced, waves, wave_width, sub_blocks)
+        key = self._pack_key(p, balanced, waves, wave_width, sub_blocks)
         cache = self._pack_cache
         if key not in cache:
             cache[key] = part.pack(
                 self.rows, self.cols, self.vals, self.m, self.n, p,
                 balanced=balanced, waves=waves, wave_width=wave_width,
-                sub_blocks=sub_blocks)
+                sub_blocks=sub_blocks, row_owner=self.row_assign,
+                col_block=self.col_assign)
         return cache[key]
+
+    def extend(self, rows=(), cols=(), vals=(), *, m_new: int = 0,
+               n_new: int = 0, test=None) -> "ProblemDelta":
+        """Describe an arrival batch: new ratings (COO over the *extended*
+        ``(m + m_new, n + n_new)`` index space) and/or new rows/columns.
+        Returns a cheap :class:`ProblemDelta` view — nothing is copied or
+        re-packed until a solver consumes it (``partial_fit`` /
+        ``StreamingSession``) or :meth:`ProblemDelta.extended`
+        materializes the concatenated problem.  ``test`` optionally
+        appends held-out ratings for the new index space."""
+        return ProblemDelta(base=self, rows=rows, cols=cols, vals=vals,
+                            m_new=m_new, n_new=n_new, test=test)
 
     # -------------------------------------------------------------- #
     @classmethod
@@ -162,6 +200,104 @@ class MCProblem:
             return cls(rows=train[0], cols=train[1], vals=train[2],
                        m=m, n=n, test=test)
         return cls(rows=rows, cols=cols, vals=vals, m=m, n=n)
+
+
+# ---------------------------------------------------------------------- #
+# Streaming deltas                                                        #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProblemDelta:
+    """An arrival batch against a base :class:`MCProblem`: ``m_new`` /
+    ``n_new`` appended rows/columns plus new COO ratings indexed in the
+    *extended* ``(base.m + m_new, base.n + n_new)`` space.
+
+    This is the unit ``partial_fit`` consumes.  It stays a view — the
+    concatenated problem is only materialized by :meth:`extended` (and
+    memoized), and the incremental re-pack never materializes it at all.
+    """
+    base: MCProblem
+    rows: np.ndarray = ()
+    cols: np.ndarray = ()
+    vals: np.ndarray = ()
+    m_new: int = 0
+    n_new: int = 0
+    #: extra held-out ratings appended to ``base.test``
+    test: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+
+    def __post_init__(self):
+        if not isinstance(self.base, MCProblem):
+            raise TypeError(
+                f"base must be MCProblem, got {type(self.base).__name__}")
+        if self.m_new < 0 or self.n_new < 0:
+            raise ValueError(
+                f"m_new/n_new must be >= 0, got {self.m_new}/{self.n_new}")
+        r, c, v = _frozen_coo(self.rows, self.cols, self.vals)
+        object.__setattr__(self, "rows", r)
+        object.__setattr__(self, "cols", c)
+        object.__setattr__(self, "vals", v)
+        self._check_bounds("delta train", r, c)
+        if self.test is not None:
+            split = _frozen_coo(*self.test)
+            self._check_bounds("delta test", split[0], split[1])
+            object.__setattr__(self, "test", split)
+        if self.nnz == 0 and self.m_new == 0 and self.n_new == 0 \
+                and self.test is None:
+            raise ValueError("empty delta: no new ratings, rows, columns "
+                             "or test ratings")
+        object.__setattr__(self, "_ext_cache", {})
+
+    def _check_bounds(self, which, r, c):
+        if len(r) and (r.min() < 0 or c.min() < 0
+                       or r.max() >= self.m or c.max() >= self.n):
+            raise ValueError(
+                f"{which} rating indices out of range for extended shape "
+                f"({self.m}, {self.n})")
+
+    # -------------------------------------------------------------- #
+    @property
+    def m(self) -> int:
+        return self.base.m + self.m_new
+
+    @property
+    def n(self) -> int:
+        return self.base.n + self.n_new
+
+    @property
+    def nnz(self) -> int:
+        return len(self.rows)
+
+    @property
+    def merged_test(self):
+        """``base.test`` with the delta's extra held-out ratings appended
+        (or whichever of the two exists)."""
+        if self.test is None:
+            return self.base.test
+        if self.base.test is None:
+            return self.test
+        return tuple(np.concatenate([a, b])
+                     for a, b in zip(self.base.test, self.test))
+
+    def extended(self, *, row_assign=None,
+                 col_assign=None) -> MCProblem:
+        """Materialize the concatenated problem (the default call is
+        memoized; pinned builds are not).  ``row_assign``/``col_assign``
+        pin an explicit partition — the streaming layer passes the sticky
+        assignment from the incremental re-pack so a batch ``solve`` of
+        this problem runs the identical serial linearization."""
+        plain = row_assign is None and col_assign is None
+        if plain and "ext" in self._ext_cache:
+            return self._ext_cache["ext"]
+        prob = MCProblem(
+            rows=np.concatenate([self.base.rows, self.rows]),
+            cols=np.concatenate([self.base.cols, self.cols]),
+            vals=np.concatenate([self.base.vals, self.vals]),
+            m=self.m, n=self.n, test=self.merged_test,
+            val=self.base.val, dtype=self.base.dtype,
+            row_assign=row_assign, col_assign=col_assign)
+        if plain:
+            self._ext_cache["ext"] = prob
+        return prob
 
 
 # ---------------------------------------------------------------------- #
@@ -271,6 +407,10 @@ class AsyncSimConfig(SolverConfig):
     speed: Optional[Tuple[float, ...]] = None
     failures: Tuple[Tuple[float, int], ...] = ()
     record_every: float = 0.5
+    #: rating-arrival events ``((virtual_time, (rating ids...)), ...)``:
+    #: the listed training ratings stay invisible until their batch's
+    #: virtual time (streaming workload; NOMAD mode only)
+    arrivals: Tuple[Tuple[float, Tuple[int, ...]], ...] = ()
 
     def __post_init__(self):
         super().__post_init__()
@@ -285,6 +425,16 @@ class AsyncSimConfig(SolverConfig):
             if len(self.speed) != self.p:
                 raise ValueError(
                     f"speed has {len(self.speed)} entries for p={self.p}")
+        if self.arrivals:
+            if self.mode != "nomad":
+                raise ValueError(
+                    "arrivals are only simulated for mode='nomad' (the "
+                    "bulk-synchronous baselines re-pack per epoch)")
+            object.__setattr__(self, "arrivals", tuple(
+                (float(t), tuple(int(g) for g in ids))
+                for t, ids in self.arrivals))
+            if any(t < 0 for t, _ in self.arrivals):
+                raise ValueError("arrival times must be >= 0")
 
     def to_sim_config(self):
         from .core.async_sim import SimConfig
@@ -295,7 +445,7 @@ class AsyncSimConfig(SolverConfig):
             speed=(None if self.speed is None
                    else np.asarray(self.speed, dtype=np.float64)),
             failures=self.failures, seed=self.seed,
-            record_every=self.record_every)
+            record_every=self.record_every, arrivals=self.arrivals)
 
 
 # ---------------------------------------------------------------------- #
@@ -400,12 +550,23 @@ def solve(problem: MCProblem, config: SolverConfig, *, mesh=None,
         raise KeyError(
             f"no solver registered for {type(config).__name__}; "
             f"available: {solver_names()}")
-    name, fn = entry
+    _, fn = entry
     t0 = time.perf_counter()
     result = fn(problem, config, mesh=mesh, warm_start=warm_start,
                 verbose=verbose)
+    return _finalize(result, config, t0)
+
+
+def _finalize(result: FitResult, config: SolverConfig,
+              t0: float) -> FitResult:
+    """Shared result epilogue: stamp wall time, registry solver name and
+    the exact config (used by ``solve``, ``partial_fit`` and the
+    streaming session so the dispatch rule lives in one place)."""
     result.wall_time = time.perf_counter() - t0
-    result.solver = name
+    for cls in type(config).__mro__:
+        if cls in _SOLVERS:
+            result.solver = _SOLVERS[cls][0]
+            break
     result.config = config
     return result
 
@@ -419,35 +580,230 @@ def _warm_factors(warm_start: Optional[FitResult], dtype=None):
 
 
 # ---------------------------------------------------------------------- #
+# Streaming front door: partial_fit                                       #
+# ---------------------------------------------------------------------- #
+
+_PARTIAL: Dict[Type[SolverConfig], Callable] = {}
+
+
+def register_partial_fit(config_cls: Type[SolverConfig]):
+    """Register ``fn(result, delta, config, *, mesh, verbose) ->
+    FitResult`` as the streaming continuation for ``config_cls``."""
+    def deco(fn):
+        if config_cls in _PARTIAL:
+            raise ValueError(
+                f"partial_fit for {config_cls.__name__} already registered")
+        _PARTIAL[config_cls] = fn
+        return fn
+    return deco
+
+
+def supports_partial_fit(config) -> bool:
+    """True if ``config`` (an instance, class, or solver name) has a
+    registered streaming continuation."""
+    if isinstance(config, str):
+        config = config_for(config)
+    cls = config if isinstance(config, type) else type(config)
+    return any(c in _PARTIAL for c in cls.__mro__)
+
+
+def streaming_solver_names() -> List[str]:
+    """Names of registered solvers that support ``partial_fit``."""
+    return sorted(n for n in _BY_NAME if supports_partial_fit(n))
+
+
+def partial_fit(result: FitResult, delta: ProblemDelta,
+                config: Optional[SolverConfig] = None, *, mesh=None,
+                verbose: bool = False) -> FitResult:
+    """Continue a fit after an arrival batch: grow the factors for the
+    delta's new rows/columns (existing entries bitwise-untouched, new
+    rows seeded deterministically), absorb the new ratings, and run
+    ``config.epochs`` more epochs with the step-size schedule resumed
+    from ``result.epochs_done``.
+
+    ``config`` defaults to ``result.config``.  NOMAD runs the genuinely
+    incremental path — ``partition.repack_delta`` re-colors only the
+    cells the delta touches — and is bitwise-identical to a warm-started
+    ``solve`` on the concatenated data under the same (sticky) partition;
+    DSGD/Hogwild re-pack the extended problem but share the same
+    deterministic factor growth.  Solvers without a registered
+    continuation (CCD++/ALS/the simulator) raise ``NotImplementedError``.
+
+    The returned result's ``extras["problem"]`` is the materialized
+    extended :class:`MCProblem` (pinned to the sticky partition for
+    NOMAD) — build the next arrival's delta from it to chain batches:
+    ``delta2 = res.extras["problem"].extend(...)``.
+    """
+    if not isinstance(result, FitResult):
+        raise TypeError(
+            f"result must be FitResult, got {type(result).__name__}")
+    if not isinstance(delta, ProblemDelta):
+        raise TypeError(
+            f"delta must be ProblemDelta, got {type(delta).__name__}")
+    if config is None:
+        config = result.config
+        if config is None:
+            raise ValueError(
+                "result carries no config; pass partial_fit(..., config=)")
+    fn = None
+    for cls in type(config).__mro__:
+        if cls in _PARTIAL:
+            fn = _PARTIAL[cls]
+            break
+    if fn is None:
+        raise NotImplementedError(
+            f"{type(config).__name__} has no partial_fit; streaming "
+            f"solvers: {streaming_solver_names()}")
+    t0 = time.perf_counter()
+    out = fn(result, delta, config, mesh=mesh, verbose=verbose)
+    return _finalize(out, config, t0)
+
+
+# ---------------------------------------------------------------------- #
 # Solver implementations (adapters over core/)                            #
 # ---------------------------------------------------------------------- #
 
-@register_solver("nomad", NomadConfig)
-def _solve_nomad(problem: MCProblem, config: NomadConfig, *, mesh=None,
-                 warm_start=None, verbose=False) -> FitResult:
-    import jax
+def _nomad_engine(br, config: NomadConfig, mesh):
     from .core.nomad import NomadRingEngine
+    return NomadRingEngine(br=br, k=config.k, lam=config.lam,
+                           schedule=config.make_schedule(),
+                           policy=config.kernel, mesh=mesh)
+
+
+def _nomad_run(eng, config: NomadConfig, test, start,
+               verbose) -> FitResult:
+    """Train an initialized engine for ``config.epochs`` starting at
+    schedule position ``start`` and package the result."""
+    eng.epoch_idx = int(start)      # schedule resumes where it left off
+    trace = eng.train(int(config.epochs), test=test, verbose=verbose)
+    W, H = eng.factors()
+    epochs, rmses = _as_trace_arrays(trace)
+    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
+                     epochs_done=int(start) + int(config.epochs))
+
+
+def _streaming_repack(base_br, base_problem: MCProblem,
+                      delta: ProblemDelta, config: NomadConfig):
+    """Extended packing under the sticky partition: the incremental
+    delta re-pack when the layout supports it, a from-scratch pack pinned
+    to the extended sticky assignment otherwise (sub-block boundaries
+    move when n_local grows, so the pipelined layout cannot be patched)."""
+    if config.kernel.sub_blocks == 1:
+        return part.repack_delta(
+            base_br, base_problem.rows, base_problem.cols,
+            base_problem.vals, delta.rows, delta.cols, delta.vals,
+            delta.m, delta.n)
+    ext_rows = np.concatenate([base_problem.rows, delta.rows])
+    ext_cols = np.concatenate([base_problem.cols, delta.cols])
+    row_owner, col_block = part.extend_assignments(
+        base_br, ext_rows, ext_cols, delta.m, delta.n)
+    return part.pack(
+        ext_rows, ext_cols,
+        np.concatenate([base_problem.vals, delta.vals]),
+        delta.m, delta.n, config.p, waves=config.kernel.wave,
+        sub_blocks=config.kernel.sub_blocks, row_owner=row_owner,
+        col_block=col_block)
+
+
+def _sticky_extended_problem(delta: ProblemDelta, br,
+                             config: NomadConfig) -> MCProblem:
+    """The extended problem pinned to ``br``'s sticky partition, with its
+    pack cache pre-seeded with ``br`` — so the next round's
+    ``delta.base.packed(...)`` (or a batch ``solve``) is a cache hit
+    instead of an O(total nnz) from-scratch re-pack of all history.
+    (``br`` is exactly what that pack would produce: same assignment,
+    property-tested bitwise in tests/test_streaming.py.)"""
+    ext = delta.extended(row_assign=br.row_owner, col_assign=br.col_block)
+    policy = config.kernel
+    ext._pack_cache[MCProblem._pack_key(
+        config.p, config.balanced, policy.wave, None,
+        policy.sub_blocks)] = br
+    return ext
+
+
+def _nomad_cold_start(problem: MCProblem, config: NomadConfig, mesh,
+                      warm_start):
+    """Pack + engine + initial factors (warm, or Algorithm 1's seeded
+    init) — the single cold-start path shared by ``_solve_nomad`` and
+    ``StreamingSession`` (the session's bitwise==batch guarantee depends
+    on the two never diverging)."""
+    import jax
     from .core.objective import init_factors
 
     policy = config.kernel
     br = problem.packed(config.p, balanced=config.balanced,
                         waves=policy.wave, sub_blocks=policy.sub_blocks)
-    eng = NomadRingEngine(br=br, k=config.k, lam=config.lam,
-                          schedule=config.make_schedule(), policy=policy,
-                          mesh=mesh)
+    eng = _nomad_engine(br, config, mesh)
     W0, H0, start = _warm_factors(warm_start, dtype=problem.dtype)
     if W0 is None:
         W0, H0 = init_factors(jax.random.key(config.seed), problem.m,
                               problem.n, config.k)
         W0, H0 = np.asarray(W0), np.asarray(H0)
     eng.init_factors(W0, H0)
-    eng.epoch_idx = int(start)      # schedule resumes where it left off
-    trace = eng.train(int(config.epochs), test=problem.test,
-                      verbose=verbose)
-    W, H = eng.factors()
-    epochs, rmses = _as_trace_arrays(trace)
-    return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
-                     epochs_done=int(start) + int(config.epochs))
+    return eng, start
+
+
+@register_solver("nomad", NomadConfig)
+def _solve_nomad(problem: MCProblem, config: NomadConfig, *, mesh=None,
+                 warm_start=None, verbose=False) -> FitResult:
+    eng, start = _nomad_cold_start(problem, config, mesh, warm_start)
+    return _nomad_run(eng, config, problem.test, start, verbose)
+
+
+@register_partial_fit(NomadConfig)
+def _partial_fit_nomad(result: FitResult, delta: ProblemDelta,
+                       config: NomadConfig, *, mesh=None,
+                       verbose=False) -> FitResult:
+    from .core.objective import grow_factors
+    policy = config.kernel
+    base_br = delta.base.packed(config.p, balanced=config.balanced,
+                                waves=policy.wave,
+                                sub_blocks=policy.sub_blocks)
+    br = _streaming_repack(base_br, delta.base, delta, config)
+    eng = _nomad_engine(br, config, mesh)
+    W0, H0 = grow_factors(
+        np.asarray(result.W, dtype=delta.base.dtype),
+        np.asarray(result.H, dtype=delta.base.dtype),
+        delta.m_new, delta.n_new, seed=config.seed)
+    eng.init_factors(W0, H0)
+    res = _nomad_run(eng, config, delta.merged_test,
+                     result.epochs_done, verbose)
+    # the extended problem pinned to the sticky partition (pack cache
+    # pre-seeded with br): feeding the next delta off this — rather than
+    # a bare concat, which would re-run LPT and shuffle the blocks —
+    # keeps a partial_fit chain on one serial linearization and keeps it
+    # incremental
+    res.extras["problem"] = _sticky_extended_problem(delta, br, config)
+    return res
+
+
+@register_partial_fit(DsgdConfig)
+def _partial_fit_dsgd(result, delta, config, *, mesh=None, verbose=False):
+    return _partial_refit(result, delta, config, mesh=mesh,
+                          verbose=verbose)
+
+
+@register_partial_fit(HogwildConfig)
+def _partial_fit_hogwild(result, delta, config, *, mesh=None,
+                         verbose=False):
+    return _partial_refit(result, delta, config, mesh=mesh,
+                          verbose=verbose)
+
+
+def _partial_refit(result: FitResult, delta: ProblemDelta,
+                   config: SolverConfig, *, mesh=None,
+                   verbose=False) -> FitResult:
+    """Generic streaming continuation for solvers without an incremental
+    pack: deterministic factor growth + warm-started batch solve on the
+    concatenated data."""
+    from .core.objective import grow_factors
+    W2, H2 = grow_factors(np.asarray(result.W), np.asarray(result.H),
+                          delta.m_new, delta.n_new, seed=config.seed)
+    warm = dataclasses.replace(result, W=W2, H=H2)
+    ext = delta.extended()
+    res = solve(ext, config, mesh=mesh, warm_start=warm, verbose=verbose)
+    res.extras["problem"] = ext
+    return res
 
 
 @register_solver("dsgd", DsgdConfig)
@@ -545,3 +901,98 @@ def _solve_async_sim(problem: MCProblem, config: AsyncSimConfig, *,
                 "trace_virtual_time": np.asarray(
                     [t for t, _, _ in res.trace], dtype=np.float64),
                 "update_log": res.update_log})
+
+
+# ---------------------------------------------------------------------- #
+# Streaming session                                                       #
+# ---------------------------------------------------------------------- #
+
+class StreamingSession:
+    """Online matrix completion: chain warm-started rounds over a stream
+    of arrival batches.
+
+        >>> sess = StreamingSession(problem, NomadConfig(k=16, p=8))
+        >>> sess.fit()                       # cold start on the base data
+        >>> for b in stream:                 # e.g. data.pipeline arrivals
+        ...     res = sess.arrive(b["rows"], b["cols"], b["vals"],
+        ...                       m_new=b["m_new"], n_new=b["n_new"])
+
+    For NOMAD the session keeps one live engine across batches: each
+    ``arrive`` incrementally re-packs only the cells the delta touches
+    (``partition.repack_delta``), grows the factor shards in place
+    (``NomadRingEngine.grow`` — old entries bitwise-untouched), and runs
+    more epochs with the step-size schedule resumed, so the whole chain
+    is bitwise-identical to ``partial_fit`` calls (and to warm-started
+    batch refits) without rebuilding the engine or re-coloring untouched
+    cells.  Other streaming solvers route through :func:`partial_fit`.
+    """
+
+    def __init__(self, problem: MCProblem, config: SolverConfig, *,
+                 mesh=None, verbose: bool = False):
+        if not isinstance(problem, MCProblem):
+            raise TypeError(f"problem must be MCProblem, got "
+                            f"{type(problem).__name__}")
+        if not supports_partial_fit(config):
+            raise NotImplementedError(
+                f"{type(config).__name__} does not support streaming; "
+                f"streaming solvers: {streaming_solver_names()}")
+        self.problem = problem
+        self.config = config
+        self.mesh = mesh
+        self.verbose = verbose
+        self.result: Optional[FitResult] = None
+        self.history: List[FitResult] = []
+        self._eng = None
+
+    def _cfg(self, epochs) -> SolverConfig:
+        return self.config if epochs is None else dataclasses.replace(
+            self.config, epochs=epochs)
+
+    def _finish(self, res: FitResult, t0: float,
+                cfg: SolverConfig) -> FitResult:
+        res = _finalize(res, cfg, t0)
+        self.result = res
+        self.history.append(res)
+        return res
+
+    def fit(self, epochs=None) -> FitResult:
+        """Run ``epochs`` (default ``config.epochs``) on the current data
+        — the cold start, or further refinement between arrivals."""
+        cfg = self._cfg(epochs)
+        t0 = time.perf_counter()
+        if isinstance(cfg, NomadConfig):
+            if self._eng is None:
+                self._eng, _ = _nomad_cold_start(self.problem, cfg,
+                                                 self.mesh, self.result)
+            start = 0 if self.result is None else self.result.epochs_done
+            res = _nomad_run(self._eng, cfg, self.problem.test, start,
+                             self.verbose)
+        else:
+            res = solve(self.problem, cfg, mesh=self.mesh,
+                        warm_start=self.result, verbose=self.verbose)
+        return self._finish(res, t0, cfg)
+
+    def arrive(self, rows=(), cols=(), vals=(), *, m_new: int = 0,
+               n_new: int = 0, test=None, epochs=None) -> FitResult:
+        """Absorb an arrival batch (new ratings / rows / columns) and run
+        ``epochs`` more epochs warm-started from the current factors."""
+        if self.result is None:
+            self.fit()
+        cfg = self._cfg(epochs)
+        delta = self.problem.extend(rows, cols, vals, m_new=m_new,
+                                    n_new=n_new, test=test)
+        t0 = time.perf_counter()
+        if isinstance(cfg, NomadConfig):
+            br = _streaming_repack(self._eng.br, self.problem, delta, cfg)
+            self._eng.grow(br, seed=cfg.seed)
+            res = _nomad_run(self._eng, cfg, delta.merged_test,
+                             self.result.epochs_done, self.verbose)
+            # pin the sticky partition (pack cache seeded with br) so any
+            # batch re-solve of the session's problem replays the
+            # identical serial order without re-packing history
+            self.problem = _sticky_extended_problem(delta, br, cfg)
+        else:
+            res = partial_fit(self.result, delta, cfg, mesh=self.mesh,
+                              verbose=self.verbose)
+            self.problem = delta.extended()
+        return self._finish(res, t0, cfg)

@@ -53,6 +53,11 @@ class SimConfig:
     failures: Tuple[Tuple[float, int], ...] = ()  # (time, worker) events
     seed: int = 0
     record_every: float = 0.5     # RMSE trace granularity, in epochs
+    #: rating-arrival events: (virtual_time, rating ids) batches.  Listed
+    #: ratings are invisible until their batch's time — they then join
+    #: their owner's per-item segments and are picked up the next time
+    #: the nomadic item visits (streaming workload, NOMAD only).
+    arrivals: Tuple[Tuple[float, Tuple[int, ...]], ...] = ()
 
 
 @dataclasses.dataclass
@@ -91,10 +96,26 @@ class NomadSimulator:
         row_cnt = np.bincount(self.rows, minlength=m)
         self.row_owner = balanced_assign(row_cnt, p)
 
+        # rating-arrival schedule: listed ratings start invisible
+        self._arrivals = []
+        pending = np.zeros(len(self.rows), dtype=bool)
+        for t_arr, ids in cfg.arrivals:
+            ids = np.asarray(ids, dtype=np.int64)
+            if t_arr < 0:
+                raise ValueError(f"arrival time must be >= 0, got {t_arr}")
+            if len(ids) and (ids.min() < 0 or ids.max() >= len(self.rows)):
+                raise ValueError("arrival rating ids out of range")
+            if pending[ids].any() or len(np.unique(ids)) != len(ids):
+                raise ValueError("a rating may only arrive once")
+            pending[ids] = True
+            self._arrivals.append((float(t_arr), ids))
+
         # per (worker, item): list of rating ids, ordered  (\bar\Omega_j^{(q)})
         self.cell: Dict[Tuple[int, int], np.ndarray] = {}
         owner_of_rating = self.row_owner[self.rows]
-        order = np.lexsort((self.rows, self.cols, owner_of_rating))
+        active = np.flatnonzero(~pending)
+        order = active[np.lexsort((self.rows[active], self.cols[active],
+                                   owner_of_rating[active]))]
         key = owner_of_rating[order].astype(np.int64) * n + self.cols[order]
         bounds = np.flatnonzero(np.diff(key)) + 1
         for seg in np.split(order, bounds):
@@ -151,6 +172,12 @@ class NomadSimulator:
         for q in range(p):
             start_next(q, 0.0)
 
+        # schedule the rating-arrival batches
+        # events: ('ratings', bi, _) batch bi of cfg.arrivals lands
+        for bi, (t_arr, _) in enumerate(self._arrivals):
+            seq += 1
+            heapq.heappush(heap, (t_arr, seq, "ratings", bi, 0))
+
         fail_iter = iter(sorted(cfg.failures))
         next_fail = next(fail_iter, None)
 
@@ -193,6 +220,21 @@ class NomadSimulator:
                         self.cell[dst] = (np.concatenate([self.cell[dst], seg])
                                           if dst in self.cell else seg)
                 next_fail = next(fail_iter, None)
+
+            if kind == "ratings":
+                # merge the batch into its owner-item segments.  Segments
+                # already in flight captured their rating list at start,
+                # so the new ratings only take effect for segments that
+                # start after this instant — the start-time linearization
+                # (and with it serializability) is preserved.
+                for g in self._arrivals[j][1]:
+                    qg = int(self.row_owner[self.rows[g]])
+                    jj = int(self.cols[g])
+                    seg = self.cell.get((qg, jj))
+                    self.cell[(qg, jj)] = (
+                        np.asarray([g], dtype=np.int64) if seg is None
+                        else np.concatenate([seg, [g]]))
+                continue
 
             if not alive[q]:
                 continue

@@ -171,21 +171,26 @@ class NomadRingEngine:
     policy: Optional[KernelPolicy] = None  # overrides impl/sub_blocks
 
     def __post_init__(self):
-        br = self.br
         if self.policy is None:
             self.policy = KernelPolicy.coerce(self.impl,
                                               sub_blocks=self.sub_blocks)
         else:
             self.impl = self.policy.impl
             self.sub_blocks = self.policy.sub_blocks
-        policy = self.policy
-        src = policy.cell_arrays(br, pipelined=self.mesh is not None)
-        self.rows, self.cols, self.vals, self.mask = map(jnp.asarray, src)
         self.epoch_idx = 0
+        self._load_pack(self.br)
+
+    def _load_pack(self, br: part.BlockedRatings):
+        """(Re)load the packed rating arrays onto the device(s); shared by
+        construction and :meth:`grow`."""
+        self.br = br
+        src = self.policy.cell_arrays(br, pipelined=self.mesh is not None)
+        self.rows, self.cols, self.vals, self.mask = map(jnp.asarray, src)
         self._eval_cache = None
         if self.mesh is not None:
             axis = self.mesh.axis_names[0]
-            fn = _spmd_epoch_fn(br.p, axis, self.lam, policy, br.sub_starts)
+            fn = _spmd_epoch_fn(br.p, axis, self.lam, self.policy,
+                                br.sub_starts)
             pspec = P(axis)
             self._spmd_epoch = jax.jit(_shard_map(
                 fn, mesh=self.mesh,
@@ -196,6 +201,57 @@ class NomadRingEngine:
             self.cols = jax.device_put(self.cols, sh)
             self.vals = jax.device_put(self.vals, sh)
             self.mask = jax.device_put(self.mask, sh)
+
+    def grow(self, br_new: part.BlockedRatings, *, seed: int = 0,
+             W_new=None, H_new=None):
+        """Swap in an extended packing (from ``partition.repack_delta``)
+        and grow the factor shards for the new rows/items.
+
+        Existing W/H entries are preserved bit for bit (they are gathered
+        off the old shards and re-scattered into the new layout, which is
+        exact); rows for the ``br_new.m - br.m`` new users and
+        ``br_new.n - br.n`` new items initialize from
+        ``objective.grow_factors`` (or the explicit ``W_new``/``H_new``).
+        ``epoch_idx`` is untouched, so the step-size schedule resumes
+        exactly where the previous arrival batch left it.
+        """
+        br_old = self.br
+        if br_new.m < br_old.m or br_new.n < br_old.n:
+            raise ValueError(
+                f"grow() cannot shrink: ({br_new.m}, {br_new.n}) < "
+                f"({br_old.m}, {br_old.n})")
+        if not (np.array_equal(br_new.row_owner[: br_old.m],
+                               br_old.row_owner)
+                and np.array_equal(br_new.col_block[: br_old.n],
+                                   br_old.col_block)):
+            raise ValueError(
+                "grow() needs a sticky extension of the current partition "
+                "(existing row/col assignments unchanged); use "
+                "partition.repack_delta")
+        from .objective import grow_factors
+        W, H = self.factors()
+        m_new = br_new.m - br_old.m
+        n_new = br_new.n - br_old.n
+        # default both sides to the seeded draw; an explicit W_new/H_new
+        # overrides only its own side (the other keeps the draw, so a
+        # one-sided override never silently changes the documented init)
+        W2, H2 = grow_factors(W, H, m_new, n_new, seed=seed)
+        if W_new is not None:
+            W_new = np.asarray(W_new, W.dtype)
+            if W_new.shape != (m_new, self.k):
+                raise ValueError(
+                    f"W_new must have shape ({m_new}, {self.k}), got "
+                    f"{W_new.shape}")
+            W2 = np.concatenate([W, W_new])
+        if H_new is not None:
+            H_new = np.asarray(H_new, H.dtype)
+            if H_new.shape != (n_new, self.k):
+                raise ValueError(
+                    f"H_new must have shape ({n_new}, {self.k}), got "
+                    f"{H_new.shape}")
+            H2 = np.concatenate([H, H_new])
+        self._load_pack(br_new)
+        self.init_factors(W2, H2)
 
     def init_factors(self, W0: np.ndarray, H0: np.ndarray):
         Ws, Hs = part.shard_factors(W0, H0, self.br)

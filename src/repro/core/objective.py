@@ -39,6 +39,29 @@ def init_factors_np(seed: int, m: int, n: int, k: int,
     return W, H
 
 
+def grow_factors(W: np.ndarray, H: np.ndarray, m_new: int, n_new: int, *,
+                 seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Append factor rows for newly-arrived users/items.
+
+    New rows draw from UniformReal(0, 1/sqrt(k)) — the same distribution
+    Algorithm 1 initializes from — using an rng keyed on ``(seed,
+    extended dims)`` so every growth round is deterministic yet distinct.
+    Existing entries are copied bit for bit, which is what lets a
+    streaming ``partial_fit`` match a warm-started batch refit exactly.
+    """
+    W = np.asarray(W)
+    H = np.asarray(H)
+    k = W.shape[1]
+    rng = np.random.default_rng(
+        (seed, W.shape[0] + m_new, H.shape[0] + n_new, 0x6806))
+    scale = 1.0 / np.sqrt(k)
+    W2 = np.concatenate(
+        [W, rng.uniform(0.0, scale, size=(m_new, k)).astype(W.dtype)])
+    H2 = np.concatenate(
+        [H, rng.uniform(0.0, scale, size=(n_new, k)).astype(H.dtype)])
+    return W2, H2
+
+
 def sgd_pair_update(w, h, a, lr, lam):
     """One SGD update on a single rating (eqs. 9-10). Returns (w', h').
 

@@ -57,6 +57,61 @@ def contiguous_assign(count: int, p: int) -> np.ndarray:
     return np.repeat(np.arange(p, dtype=np.int32), sizes)
 
 
+def extend_assign(assign: np.ndarray, weights: np.ndarray,
+                  new_weights: np.ndarray, p: int) -> np.ndarray:
+    """Continue :func:`balanced_assign` without disturbing placed items.
+
+    ``assign``/``weights`` describe the items already assigned (pass the
+    items' *current* weights, which may have grown since placement, so the
+    bin loads new items see are the true ones); ``new_weights`` are the
+    appended items, placed heaviest-first into the lightest bin exactly as
+    :func:`balanced_assign` would.  The returned array is
+    ``concat(assign, new_assign)`` — existing entries are never moved.
+    This stickiness is what lets :func:`repack_delta` leave every cell
+    that received no new ratings byte-for-byte untouched.
+    """
+    assign = np.asarray(assign, dtype=np.int32)
+    weights = np.asarray(weights, dtype=np.int64)
+    new_weights = np.asarray(new_weights, dtype=np.int64)
+    load = np.bincount(assign, weights=weights + 1,
+                       minlength=p).astype(np.int64)
+    out = np.concatenate(
+        [assign, np.zeros(len(new_weights), dtype=np.int32)])
+    base = len(assign)
+    for i in np.argsort(-new_weights, kind="stable"):
+        b = int(np.argmin(load))
+        out[base + int(i)] = b
+        load[b] += int(new_weights[i]) + 1
+    return out
+
+
+def extend_assignments(br: "BlockedRatings", ext_rows: np.ndarray,
+                       ext_cols: np.ndarray, m: int, n: int):
+    """Sticky extended ``(row_owner, col_block)`` for the extended COO:
+    existing rows/cols keep ``br``'s bins (weighted by their *extended*
+    rating counts), appended ones are placed by :func:`extend_assign`.
+    The single source of the stickiness rule — used by both
+    :func:`repack_delta` and the from-scratch fallback for pipelined
+    (``sub_blocks > 1``) layouts."""
+    ext_row_cnt = np.bincount(ext_rows, minlength=m)
+    ext_col_cnt = np.bincount(ext_cols, minlength=n)
+    row_owner = extend_assign(br.row_owner, ext_row_cnt[: br.m],
+                              ext_row_cnt[br.m:], br.p)
+    col_block = extend_assign(br.col_block, ext_col_cnt[: br.n],
+                              ext_col_cnt[br.n:], br.p)
+    return row_owner, col_block
+
+
+def _validate_assign(assign, count: int, p: int, what: str) -> np.ndarray:
+    a = np.asarray(assign, dtype=np.int32)
+    if a.shape != (count,):
+        raise ValueError(
+            f"{what} must have shape ({count},), got {a.shape}")
+    if len(a) and (a.min() < 0 or a.max() >= p):
+        raise ValueError(f"{what} values must lie in [0, {p})")
+    return a
+
+
 def sub_block_starts(n_local: int, sub_blocks: int) -> np.ndarray:
     """Col boundaries of the item sub-blocks within one H block —
     the single source of truth shared by :func:`pack`, the SPMD engine
@@ -232,42 +287,13 @@ class BlockedRatings:
     sub_nnz: np.ndarray = None     # (p, p, sub_blocks) real counts
 
 
-def pack(
-    rows: np.ndarray,
-    cols: np.ndarray,
-    vals: np.ndarray,
-    m: int,
-    n: int,
-    p: int,
-    balanced: bool = True,
-    waves: bool = True,
-    wave_width: Optional[int] = None,
-    sub_blocks: int = 1,
-) -> BlockedRatings:
-    """Pack COO ratings into the ring-ordered block structure.
-
-    ``waves=True`` additionally emits the conflict-free wave layout (and
-    stores the sequential arrays wave-major so both executions share one
-    serial ordering).  ``sub_blocks > 1`` pre-partitions every cell by
-    item sub-block for the SPMD pipelined engine; the cell-level order
-    becomes sub-block-major with waves colored per sub-block, which is
-    exactly the order the pipelined engine executes.
-    """
-    rows = np.asarray(rows, dtype=np.int64)
-    cols = np.asarray(cols, dtype=np.int64)
-    vals_f = np.asarray(vals, dtype=np.float32)
-    nnz = len(rows)
-
-    row_cnt = np.bincount(rows, minlength=m)
-    col_cnt = np.bincount(cols, minlength=n)
-    if balanced:
-        row_owner = balanced_assign(row_cnt, p)
-        col_block = balanced_assign(col_cnt, p)
-    else:
-        row_owner = contiguous_assign(m, p)
-        col_block = contiguous_assign(n, p)
-
-    # local indices + inverse maps
+def _localize(row_owner: np.ndarray, col_block: np.ndarray, m: int, n: int,
+              p: int):
+    """Local indices + inverse maps for a given assignment.  Within a bin,
+    local indices follow ascending global id — so appending new rows/cols
+    (whose global ids are larger than every existing one) never renumbers
+    an existing row or column, the invariant :func:`repack_delta` relies
+    on."""
     m_local = int(np.max(np.bincount(row_owner, minlength=p)))
     n_local = int(np.max(np.bincount(col_block, minlength=p)))
     row_local = np.zeros(m, dtype=np.int64)
@@ -281,69 +307,64 @@ def pack(
         cls = np.flatnonzero(col_block == q)
         col_local[cls] = np.arange(len(cls))
         col_of[q, : len(cls)] = cls
+    return m_local, n_local, row_local, col_local, row_of, col_of
 
-    # assign each rating to its cell; sort within cell by (col, row)
-    cell_q = row_owner[rows]
-    cell_b = col_block[cols]
-    cell_id = cell_q.astype(np.int64) * p + cell_b
-    order = np.lexsort((rows, cols, cell_id))
-    cell_sorted = cell_id[order]
-    counts = np.bincount(cell_sorted, minlength=p * p).reshape(p, p)
-    max_nnz = max(1, int(counts.max()))
 
-    if sub_blocks < 1:
-        raise ValueError("sub_blocks must be >= 1")
-    if sub_blocks > 1 and n_local // sub_blocks == 0:
-        raise ValueError(f"sub_blocks={sub_blocks} > n_local={n_local}")
-    sub_starts = sub_block_starts(n_local, sub_blocks)
-    sb = max(1, n_local // sub_blocks)
+def _order_cell(ids, rloc, cloc, *, waves: bool, sub_blocks: int, sb: int):
+    """Order one cell's ratings — already (col, row, gid)-sorted — into
+    the final serial sequence: sub-block-major, wave-major within a
+    sub-block.  Returns ``(ids, rloc, cloc, wave, sid)``; ``wave`` is
+    ``None`` when waves are off.  Shared by :func:`pack` and
+    :func:`repack_delta` so both emit identical cell sequences by
+    construction."""
+    sid = np.minimum(cloc // sb, sub_blocks - 1)
+    # sub-block-major, preserving (col, row) order within
+    sub_sort = np.argsort(sid, kind="stable")
+    ids, rloc, cloc, sid = (a[sub_sort] for a in (ids, rloc, cloc, sid))
+    if not waves:
+        return ids, rloc, cloc, None, sid
+    # wave-color each sub-block independently; offset so wave indices
+    # are globally ordered sub-block-major
+    wave = np.zeros(len(ids), dtype=np.int64)
+    off = 0
+    for sbi in range(sub_blocks):
+        seg = np.flatnonzero(sid == sbi)
+        if len(seg) == 0:
+            continue
+        wseg = greedy_wave_color(rloc[seg], cloc[seg])
+        wave[seg] = wseg + off
+        off += int(wseg.max()) + 1
+    # serial order inside the cell = wave-major (stable)
+    worder = np.argsort(wave, kind="stable")
+    ids, rloc, cloc, sid, wave = (a[worder] for a in
+                                  (ids, rloc, cloc, sid, wave))
+    return ids, rloc, cloc, wave, sid
 
-    # ---- pass 1: per cell, order ratings (sub-block-major, wave-major) --
-    # cell_info[q][s] = (ids, rloc, cloc, wave, sid) in final serial order
-    starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
-    cell_info = [[None] * p for _ in range(p)]
+
+def _fill_layouts(cell_info, vals_f, *, p, m, n, m_local, n_local,
+                  row_owner, row_local, col_block, col_local, row_of,
+                  col_of, waves, wave_width, sub_blocks,
+                  sub_starts) -> BlockedRatings:
+    """Compute padded dims from ordered cell sequences and fill every
+    layout.  ``cell_info[q][s] = (ids, rloc, cloc, wave, sid)`` in final
+    serial order (from :func:`_order_cell` or copied verbatim from an old
+    packing by :func:`repack_delta`)."""
+    max_nnz = 1
     n_waves = 1
     max_wave_sz = 1
     sub_max = 1
     for q in range(p):
-        for b in range(p):
-            lo, hi = starts[q * p + b], starts[q * p + b + 1]
-            ids = order[lo:hi]
-            s = (q - b) % p  # ring step at which worker q owns block b
-            rloc = row_local[rows[ids]]
-            cloc = col_local[cols[ids]]
-            sid = np.minimum(cloc // sb, sub_blocks - 1)
-            # sub-block-major, preserving (col, row) order within
-            sub_sort = np.argsort(sid, kind="stable")
-            ids, rloc, cloc, sid = (a[sub_sort] for a in
-                                    (ids, rloc, cloc, sid))
-            if len(ids):
-                sub_max = max(sub_max, int(np.bincount(
-                    sid, minlength=sub_blocks).max()))
+        for s in range(p):
+            ids, rloc, cloc, wave, sid = cell_info[q][s]
+            if len(ids) == 0:
+                continue
+            max_nnz = max(max_nnz, len(ids))
             if waves:
-                # wave-color each sub-block independently; offset so wave
-                # indices are globally ordered sub-block-major
-                wave = np.zeros(len(ids), dtype=np.int64)
-                off = 0
-                for sbi in range(sub_blocks):
-                    seg = np.flatnonzero(sid == sbi)
-                    if len(seg) == 0:
-                        continue
-                    wseg = greedy_wave_color(rloc[seg], cloc[seg])
-                    wave[seg] = wseg + off
-                    off += int(wseg.max()) + 1
-                # serial order inside the cell = wave-major (stable)
-                worder = np.argsort(wave, kind="stable")
-                ids, rloc, cloc, sid, wave = (a[worder] for a in
-                                              (ids, rloc, cloc, sid, wave))
-                if len(ids):
-                    n_waves = max(n_waves, int(wave.max()) + 1)
-                    max_wave_sz = max(
-                        max_wave_sz,
-                        int(np.bincount(wave, minlength=1).max()))
-            else:
-                wave = None
-            cell_info[q][s] = (ids, rloc, cloc, wave, sid)
+                n_waves = max(n_waves, int(wave.max()) + 1)
+                max_wave_sz = max(
+                    max_wave_sz, int(np.bincount(wave, minlength=1).max()))
+            sub_max = max(sub_max, int(np.bincount(
+                sid, minlength=sub_blocks).max()))
 
     if wave_width is None:
         wave_width = -(-max_wave_sz // 8) * 8   # multiple of 8 (VPU sublane)
@@ -351,7 +372,6 @@ def pack(
         raise ValueError(
             f"wave_width={wave_width} < largest wave ({max_wave_sz})")
 
-    # ---- pass 2: fill the padded layouts ------------------------------
     R = np.zeros((p, p, max_nnz), dtype=np.int32)
     C = np.zeros((p, p, max_nnz), dtype=np.int32)
     V = np.zeros((p, p, max_nnz), dtype=np.float32)
@@ -426,6 +446,212 @@ def pack(
         br.sub_rows, br.sub_cols = SR, SC
         br.sub_vals, br.sub_mask, br.sub_nnz = SV, SM, Snnz
     return br
+
+
+def pack(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    m: int,
+    n: int,
+    p: int,
+    balanced: bool = True,
+    waves: bool = True,
+    wave_width: Optional[int] = None,
+    sub_blocks: int = 1,
+    row_owner: Optional[np.ndarray] = None,
+    col_block: Optional[np.ndarray] = None,
+) -> BlockedRatings:
+    """Pack COO ratings into the ring-ordered block structure.
+
+    ``waves=True`` additionally emits the conflict-free wave layout (and
+    stores the sequential arrays wave-major so both executions share one
+    serial ordering).  ``sub_blocks > 1`` pre-partitions every cell by
+    item sub-block for the SPMD pipelined engine; the cell-level order
+    becomes sub-block-major with waves colored per sub-block, which is
+    exactly the order the pipelined engine executes.
+
+    ``row_owner``/``col_block`` override the computed assignment with an
+    explicit worker/block map (values in ``[0, p)``); the streaming layer
+    uses this to pin the extended problem to the *sticky* assignment an
+    incremental :func:`repack_delta` keeps, which is what makes the
+    incremental and from-scratch packings comparable bit for bit.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals_f = np.asarray(vals, dtype=np.float32)
+
+    row_cnt = np.bincount(rows, minlength=m)
+    col_cnt = np.bincount(cols, minlength=n)
+    if row_owner is not None:
+        row_owner = _validate_assign(row_owner, m, p, "row_owner")
+    elif balanced:
+        row_owner = balanced_assign(row_cnt, p)
+    else:
+        row_owner = contiguous_assign(m, p)
+    if col_block is not None:
+        col_block = _validate_assign(col_block, n, p, "col_block")
+    elif balanced:
+        col_block = balanced_assign(col_cnt, p)
+    else:
+        col_block = contiguous_assign(n, p)
+
+    m_local, n_local, row_local, col_local, row_of, col_of = _localize(
+        row_owner, col_block, m, n, p)
+
+    if sub_blocks < 1:
+        raise ValueError("sub_blocks must be >= 1")
+    if sub_blocks > 1 and n_local // sub_blocks == 0:
+        raise ValueError(f"sub_blocks={sub_blocks} > n_local={n_local}")
+    sub_starts = sub_block_starts(n_local, sub_blocks)
+    sb = max(1, n_local // sub_blocks)
+
+    # assign each rating to its cell; sort within cell by (col, row)
+    cell_q = row_owner[rows]
+    cell_b = col_block[cols]
+    cell_id = cell_q.astype(np.int64) * p + cell_b
+    order = np.lexsort((rows, cols, cell_id))
+    counts = np.bincount(cell_id[order], minlength=p * p).reshape(p, p)
+
+    # ---- pass 1: per cell, order ratings (sub-block-major, wave-major) --
+    # cell_info[q][s] = (ids, rloc, cloc, wave, sid) in final serial order
+    starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
+    cell_info = [[None] * p for _ in range(p)]
+    for q in range(p):
+        for b in range(p):
+            lo, hi = starts[q * p + b], starts[q * p + b + 1]
+            ids = order[lo:hi]
+            s = (q - b) % p  # ring step at which worker q owns block b
+            cell_info[q][s] = _order_cell(
+                ids, row_local[rows[ids]], col_local[cols[ids]],
+                waves=waves, sub_blocks=sub_blocks, sb=sb)
+
+    # ---- pass 2: compute padded dims and fill the layouts --------------
+    return _fill_layouts(
+        cell_info, vals_f, p=p, m=m, n=n, m_local=m_local,
+        n_local=n_local, row_owner=row_owner, row_local=row_local,
+        col_block=col_block, col_local=col_local, row_of=row_of,
+        col_of=col_of, waves=waves, wave_width=wave_width,
+        sub_blocks=sub_blocks, sub_starts=sub_starts)
+
+
+def repack_delta(
+    br: BlockedRatings,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    new_rows: np.ndarray,
+    new_cols: np.ndarray,
+    new_vals: np.ndarray,
+    m: int,
+    n: int,
+    *,
+    wave_width: Optional[int] = None,
+) -> BlockedRatings:
+    """Incrementally re-pack after ratings / rows / columns arrive.
+
+    ``br`` is the packing of the base problem (``rows/cols/vals`` over
+    ``br.m x br.n``); the extended problem appends ``new_*`` (COO indices
+    over the extended ``m x n``, with new rows/cols occupying ids
+    ``br.m.. m-1`` / ``br.n.. n-1``).  Ownership is *sticky*: existing
+    row/col assignments are kept and new ones placed by
+    :func:`extend_assign`, so only cells that actually receive new
+    ratings are re-sorted and re-wave-colored — the O(nnz_cell) greedy
+    coloring runs on the delta's cells only, and every other cell's
+    serial sequence is copied from ``br`` verbatim (its local indices
+    cannot move because new global ids sort after all existing ones).
+
+    The result is bitwise-identical — same serial linearization
+    (``ring_order``) *and* same padded layouts — to a from-scratch
+    ``pack(ext_rows, ext_cols, ext_vals, m, n, p,
+    row_owner=out.row_owner, col_block=out.col_block)``: both paths order
+    affected cells with :func:`_order_cell` on identical inputs and fill
+    through :func:`_fill_layouts`.  Property-tested in
+    ``tests/test_streaming.py``.
+    """
+    if br.sub_blocks != 1:
+        raise NotImplementedError(
+            "repack_delta requires sub_blocks == 1 (sub-block boundaries "
+            "shift when n_local grows, which would reorder every cell); "
+            "re-pack from scratch for the pipelined SPMD layout")
+    p = br.p
+    waves = br.wave_rows is not None
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    new_rows = np.asarray(new_rows, dtype=np.int64)
+    new_cols = np.asarray(new_cols, dtype=np.int64)
+    if m < br.m or n < br.n:
+        raise ValueError(
+            f"extended shape ({m}, {n}) smaller than base "
+            f"({br.m}, {br.n})")
+    if len(rows) != int(br.mask.sum()):
+        raise ValueError(
+            f"base COO has {len(rows)} ratings but br was packed from "
+            f"{int(br.mask.sum())}")
+    if len(new_rows) and (new_rows.min() < 0 or new_rows.max() >= m
+                          or new_cols.min() < 0 or new_cols.max() >= n):
+        raise ValueError(
+            f"new rating indices out of range for extended shape "
+            f"({m}, {n})")
+
+    ext_rows = np.concatenate([rows, new_rows])
+    ext_cols = np.concatenate([cols, new_cols])
+    vals_f = np.concatenate([
+        np.asarray(vals, dtype=np.float32),
+        np.asarray(new_vals, dtype=np.float32)])
+
+    row_owner, col_block = extend_assignments(br, ext_rows, ext_cols, m, n)
+    m_local, n_local, row_local, col_local, row_of, col_of = _localize(
+        row_owner, col_block, m, n, p)
+    sub_starts = sub_block_starts(n_local, 1)
+    sb = max(1, n_local)
+
+    # group the new ratings by cell
+    base_nnz = len(rows)
+    new_gid = base_nnz + np.arange(len(new_rows), dtype=np.int64)
+    new_cell = (row_owner[new_rows].astype(np.int64) * p
+                + col_block[new_cols])
+    by_cell = {}
+    grp = np.argsort(new_cell, kind="stable")
+    bounds = np.flatnonzero(np.diff(new_cell[grp])) + 1
+    for seg in np.split(grp, bounds):
+        if len(seg):
+            by_cell[int(new_cell[seg[0]])] = new_gid[seg]
+
+    cell_info = [[None] * p for _ in range(p)]
+    for q in range(p):
+        for b in range(p):
+            s = (q - b) % p
+            cnt = int(br.nnz_cell[q, s])
+            old_ids = br.gid[q, s, :cnt]
+            fresh = by_cell.get(q * p + b)
+            if fresh is None:
+                # untouched cell: reuse the stored serial sequence (and
+                # its wave coloring) verbatim — this is the saved work
+                rloc = br.rows[q, s, :cnt].astype(np.int64)
+                cloc = br.cols[q, s, :cnt].astype(np.int64)
+                wave = (np.repeat(np.arange(br.n_waves, dtype=np.int64),
+                                  br.wave_cnt[q, s]) if waves else None)
+                sid = np.zeros(cnt, dtype=np.int64)
+                cell_info[q][s] = (old_ids, rloc, cloc, wave, sid)
+            else:
+                # affected cell: merge into (col, row, gid) order — the
+                # exact per-cell order pack()'s global lexsort yields —
+                # then re-color from scratch
+                ids = np.concatenate([old_ids, fresh])
+                perm = np.lexsort((ids, ext_rows[ids], ext_cols[ids]))
+                ids = ids[perm]
+                cell_info[q][s] = _order_cell(
+                    ids, row_local[ext_rows[ids]],
+                    col_local[ext_cols[ids]], waves=waves, sub_blocks=1,
+                    sb=sb)
+
+    return _fill_layouts(
+        cell_info, vals_f, p=p, m=m, n=n, m_local=m_local,
+        n_local=n_local, row_owner=row_owner, row_local=row_local,
+        col_block=col_block, col_local=col_local, row_of=row_of,
+        col_of=col_of, waves=waves, wave_width=wave_width, sub_blocks=1,
+        sub_starts=sub_starts)
 
 
 def shard_factors(W: np.ndarray, H: np.ndarray, br: BlockedRatings

@@ -1,5 +1,5 @@
 from .synthetic import synthetic_ratings, netflix_like, train_test_split
-from .pipeline import TokenPipeline, lm_input_specs
+from .pipeline import TokenPipeline, RatingArrivalStream, lm_input_specs
 
 __all__ = ["synthetic_ratings", "netflix_like", "train_test_split",
-           "TokenPipeline", "lm_input_specs"]
+           "TokenPipeline", "RatingArrivalStream", "lm_input_specs"]

@@ -1,0 +1,95 @@
+"""Shared generators for the property-test suite.
+
+Two layers, on purpose:
+
+* **Seeded builders** (plain functions of a seed) construct the actual
+  data — random COO problems, single cells, arrival scripts.  Both the
+  hypothesis-driven tests and the seed-parametrized fallbacks (which run
+  even without hypothesis installed, via ``hypothesis_compat``) call the
+  same builders, so the property is exercised on identical data shapes
+  either way.
+* **Strategy bundles** — dicts of hypothesis strategies to splat into
+  ``@given(**BUNDLE)``.  Without hypothesis they degrade to dicts of
+  ``None`` and the ``given`` stub turns the test into a skip, exactly
+  like the rest of the suite.
+"""
+import numpy as np
+
+from hypothesis_compat import st
+
+# --------------------------------------------------------------------- #
+# Seeded builders                                                        #
+# --------------------------------------------------------------------- #
+
+
+def coo_problem(seed, m, n, nnz):
+    """Random (rows, cols, vals) over an m x n grid."""
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, m, nnz), rng.integers(0, n, nnz),
+            rng.normal(size=nnz))
+
+
+def random_cell(rng, m_t, n_t, k, nnz):
+    """One block's worth of factors + ratings (for kernel-level tests)."""
+    import jax.numpy as jnp
+    W = jnp.asarray(rng.normal(size=(m_t, k)), jnp.float32)
+    H = jnp.asarray(rng.normal(size=(n_t, k)), jnp.float32)
+    rows = rng.integers(0, m_t, nnz)
+    cols = rng.integers(0, n_t, nnz)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    return W, H, rows, cols, vals
+
+
+def arrival_script(seed, m0, n0, nnz0, batches, *, max_new_ratings=120,
+                   max_m_growth=6, max_n_growth=4):
+    """A deterministic streaming scenario: the base problem plus a list
+    of arrival batches (kwargs for ``MCProblem.extend`` /
+    ``StreamingSession.arrive``).  Batch ``t`` draws its indices over the
+    dims in force *after* its own growth, so new rows/cols receive
+    ratings in the same batch that introduces them."""
+    rng = np.random.default_rng((seed, 0x5C11))
+    base = coo_problem(rng.integers(1 << 31), m0, n0, nnz0)
+    script = []
+    m, n = m0, n0
+    for _ in range(batches):
+        m_new = int(rng.integers(0, max_m_growth + 1))
+        n_new = int(rng.integers(0, max_n_growth + 1))
+        cnt = int(rng.integers(1, max_new_ratings + 1))
+        m += m_new
+        n += n_new
+        script.append(dict(
+            rows=rng.integers(0, m, cnt), cols=rng.integers(0, n, cnt),
+            vals=rng.normal(size=cnt), m_new=m_new, n_new=n_new))
+    return base, script
+
+
+# --------------------------------------------------------------------- #
+# Strategy bundles (splat into @given(**BUNDLE))                         #
+# --------------------------------------------------------------------- #
+
+#: a packable COO problem plus worker count and balance flag
+COO_PACK = dict(seed=st.integers(0, 10_000), p=st.integers(1, 8),
+                m=st.integers(4, 60), n=st.integers(4, 40),
+                nnz=st.integers(1, 400), balanced=st.booleans())
+
+#: partition shapes for the wave-layout properties (adds sub-blocks)
+PACK_SHAPE = dict(seed=st.integers(0, 10_000), p=st.integers(1, 6),
+                  m=st.integers(4, 50), n=st.integers(4, 30),
+                  nnz=st.integers(1, 400), sub=st.integers(1, 3))
+
+#: items + weights for the load-balancing assignment properties
+ASSIGN_WEIGHTS = dict(seed=st.integers(0, 10_000), p=st.integers(1, 16),
+                      count=st.integers(1, 300))
+
+#: a single cell for the wave-kernel-vs-oracle properties
+WAVE_CELL = dict(seed=st.integers(0, 10_000),
+                 k=st.sampled_from([4, 8, 100]), nnz=st.integers(1, 300))
+
+#: streaming arrival scenarios (sizes kept small: each example packs
+#: and re-packs several times)
+ARRIVALS = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
+                batches=st.integers(1, 3))
+
+#: simulator topology (worker count, routing, stragglers)
+SIM_TOPOLOGY = dict(p=st.integers(2, 6), seed=st.integers(0, 10_000),
+                    load_balance=st.booleans(), straggle=st.booleans())

@@ -7,6 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# full forward/train-step compiles per architecture — the most expensive
+# module in the suite; CI runs it in the parallel slow job
+pytestmark = pytest.mark.slow
+
 from repro import configs
 from repro.models import transformer as T
 from repro.models import attention, layers, mamba, moe, rope

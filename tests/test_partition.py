@@ -1,20 +1,16 @@
 """Partitioning/property tests for the block packer (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, st
+import strategies
+from hypothesis_compat import given, settings
 
 from repro.core import partition as P
 
 
 @settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), p=st.integers(1, 8),
-       m=st.integers(4, 60), n=st.integers(4, 40),
-       nnz=st.integers(1, 400), balanced=st.booleans())
+@given(**strategies.COO_PACK)
 def test_pack_is_exact_partition(seed, p, m, n, nnz, balanced):
-    rng = np.random.default_rng(seed)
-    rows = rng.integers(0, m, nnz)
-    cols = rng.integers(0, n, nnz)
-    vals = rng.normal(size=nnz)
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
     br = P.pack(rows, cols, vals, m, n, p, balanced=balanced)
 
     # every rating appears exactly once across all cells
@@ -45,8 +41,7 @@ def test_pack_is_exact_partition(seed, p, m, n, nnz, balanced):
 
 
 @settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), p=st.integers(1, 16),
-       count=st.integers(1, 300))
+@given(**strategies.ASSIGN_WEIGHTS)
 def test_balanced_assign_quality(seed, p, count):
     rng = np.random.default_rng(seed)
     w = rng.integers(0, 100, count)
@@ -57,6 +52,28 @@ def test_balanced_assign_quality(seed, p, count):
     # LPT guarantee: max load <= (4/3) OPT + max item; loose but real check
     opt_lb = max(w.sum() / p, w.max() if count else 0)
     assert loads.max() <= 4 / 3 * opt_lb + w.max() + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(**strategies.ASSIGN_WEIGHTS)
+def test_extend_assign_is_sticky_and_balanced(seed, p, count):
+    """extend_assign never moves placed items, assigns every new item a
+    valid bin, and keeps the greedy load balance within the LPT bound."""
+    rng = np.random.default_rng(seed)
+    w0 = rng.integers(0, 100, count)
+    base = P.balanced_assign(w0, p)
+    n_new = int(rng.integers(0, count + 1))
+    w1 = rng.integers(0, 100, n_new)
+    out = P.extend_assign(base, w0, w1, p)
+    assert out.shape == (count + n_new,)
+    assert np.array_equal(out[:count], base)
+    assert out.min() >= 0 and out.max() < p
+    w = np.concatenate([w0, w1])
+    loads = np.bincount(out, weights=w, minlength=p)
+    # greedy list-scheduling bound (placement is two-phase, not globally
+    # sorted, so the tighter sorted-LPT constant does not apply): any
+    # bin exceeds the mean only by its last item (+1 zero-spread slack)
+    assert loads.max() <= (w.sum() + len(w)) / p + w.max() + 1
 
 
 def test_shard_unshard_roundtrip():

@@ -5,18 +5,12 @@ Hypothesis drives the worker count, topology, stragglers and routing.
 """
 import numpy as np
 import pytest
+import strategies
 from hypothesis_compat import given, settings, st
 
 from repro.core import objective, serial
 from repro.core.async_sim import NomadSimulator, SimConfig
 from repro.core.stepsize import PowerSchedule
-
-
-def _random_problem(rng, m, n, nnz):
-    rows = rng.integers(0, m, nnz)
-    cols = rng.integers(0, n, nnz)
-    vals = rng.normal(size=nnz)
-    return rows, cols, vals
 
 
 def _replay(res, rows, cols, vals, W0, H0, sched, lam):
@@ -33,16 +27,11 @@ def _replay(res, rows, cols, vals, W0, H0, sched, lam):
 
 
 @settings(max_examples=8, deadline=None)
-@given(
-    p=st.integers(2, 6),
-    seed=st.integers(0, 10_000),
-    load_balance=st.booleans(),
-    straggle=st.booleans(),
-)
+@given(**strategies.SIM_TOPOLOGY)
 def test_async_execution_is_serializable(p, seed, load_balance, straggle):
     rng = np.random.default_rng(seed)
     m, n, nnz = 40, 20, 300
-    rows, cols, vals = _random_problem(rng, m, n, nnz)
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
     W0, H0 = objective.init_factors_np(seed, m, n, 6)
     sched = PowerSchedule(alpha=0.02, beta=0.1)
     speed = (1.0 + rng.random(p) * 3) if straggle else None
@@ -58,15 +47,45 @@ def test_async_execution_is_serializable(p, seed, load_balance, straggle):
 @given(p=st.integers(2, 5), seed=st.integers(0, 10_000))
 def test_serializable_under_failures(p, seed):
     """Serializability must survive worker failure + elastic re-assign."""
-    rng = np.random.default_rng(seed)
     m, n, nnz = 30, 15, 250
-    rows, cols, vals = _random_problem(rng, m, n, nnz)
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
     W0, H0 = objective.init_factors_np(seed, m, n, 4)
     sched = PowerSchedule(alpha=0.02, beta=0.1)
     cfg = SimConfig(p=p, k=4, lam=0.01, schedule=sched, epochs=2.0,
                     seed=seed, failures=((50.0, 0),))
     res = NomadSimulator(cfg, m, n, rows, cols, vals, W0, H0).run()
     assert res.n_updates > 0
+    Wr, Hr = _replay(res, rows, cols, vals, W0, H0, sched, 0.01)
+    assert np.array_equal(Wr, res.W)
+    assert np.array_equal(Hr, res.H)
+
+
+@settings(max_examples=6, deadline=None)
+@given(p=st.integers(2, 5), seed=st.integers(0, 10_000),
+       late_frac=st.floats(0.1, 0.6))
+def test_serializable_under_rating_arrivals(p, seed, late_frac):
+    """The streaming workload: a slice of the ratings arrives in batches
+    at virtual times.  Arrived ratings must never be touched before their
+    batch lands, and the execution must stay bitwise-serializable."""
+    m, n, nnz = 40, 20, 300
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    W0, H0 = objective.init_factors_np(seed, m, n, 6)
+    sched = PowerSchedule(alpha=0.02, beta=0.1)
+    n_late = int(nnz * late_frac)
+    late = np.arange(nnz - n_late, nnz)
+    half = n_late // 2
+    arrivals = ((80.0, tuple(late[:half])), (300.0, tuple(late[half:])))
+    cfg = SimConfig(p=p, k=6, lam=0.01, schedule=sched, epochs=2.0,
+                    seed=seed, arrivals=arrivals)
+    res = NomadSimulator(cfg, m, n, rows, cols, vals, W0, H0).run()
+    assert res.n_updates > 0
+    first_touch = {}
+    for t, g in res.update_log:
+        first_touch.setdefault(g, t)
+    for t_arr, ids in arrivals:
+        for g in ids:
+            assert first_touch.get(g, np.inf) >= t_arr, \
+                f"rating {g} touched at {first_touch[g]} < arrival {t_arr}"
     Wr, Hr = _replay(res, rows, cols, vals, W0, H0, sched, 0.01)
     assert np.array_equal(Wr, res.W)
     assert np.array_equal(Hr, res.H)

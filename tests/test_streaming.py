@@ -1,0 +1,431 @@
+"""The streaming layer's equivalence harness.
+
+Three claims, each tested bitwise:
+
+1. **Delta re-pack == from-scratch pack.**  ``partition.repack_delta``
+   re-colors only the cells an arrival batch touches, yet emits the
+   *identical* packing — same serial linearization (``ring_order``) and
+   same padded layouts — as ``pack()`` of the concatenated problem under
+   the same sticky assignment.  Chained across batches, so re-packing a
+   re-packed result is covered.
+2. **partial_fit == warm-started batch refit.**  For NOMAD (the
+   incremental path) and DSGD, a ``partial_fit`` chain over an arrival
+   script matches a manual grow-factors + ``solve(concatenated,
+   warm_start=...)`` at every step.
+3. **StreamingSession == partial_fit.**  The session's persistent-engine
+   path (``NomadRingEngine.grow``) reproduces the stateless chain.
+
+Hypothesis drives shapes/scripts where installed; seed-parametrized
+fallbacks always run (same builders, via tests/strategies.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import strategies
+from hypothesis_compat import given, settings, st
+
+from repro import api
+from repro.core import objective, partition as P
+from repro.core.stepsize import PowerSchedule
+
+_LAYOUT_FIELDS = (
+    "p", "m", "n", "m_local", "n_local", "max_nnz", "n_waves",
+    "wave_width", "sub_blocks")
+_ARRAY_FIELDS = (
+    "row_owner", "row_local", "col_block", "col_local", "row_of",
+    "col_of", "rows", "cols", "vals", "mask", "nnz_cell", "gid",
+    "wave_rows", "wave_cols", "wave_vals", "wave_mask", "wave_gid",
+    "wave_cnt", "sub_starts")
+
+
+def _assert_same_packing(a, b):
+    for f in _LAYOUT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+    for f in _ARRAY_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None:
+            assert y is None, f
+        else:
+            assert np.array_equal(x, y), f
+    assert np.array_equal(a.ring_order(), b.ring_order())
+
+
+# --------------------------------------------------------------------- #
+# 1. incremental re-pack == from-scratch pack                            #
+# --------------------------------------------------------------------- #
+
+def _check_repack_matches_scratch(seed, p, batches, waves=True):
+    (rows, cols, vals), script = strategies.arrival_script(
+        seed, 30, 18, 200, batches)
+    m, n = 30, 18
+    br = P.pack(rows, cols, vals, m, n, p, waves=waves)
+    for b in script:
+        m2, n2 = m + b["m_new"], n + b["n_new"]
+        br2 = P.repack_delta(br, rows, cols, vals, b["rows"], b["cols"],
+                             b["vals"], m2, n2)
+        rows = np.concatenate([rows, b["rows"]])
+        cols = np.concatenate([cols, b["cols"]])
+        vals = np.concatenate([vals, b["vals"]])
+        full = P.pack(rows, cols, vals, m2, n2, p, waves=waves,
+                      row_owner=br2.row_owner, col_block=br2.col_block)
+        _assert_same_packing(br2, full)
+        # stickiness: existing assignments never move
+        assert np.array_equal(br2.row_owner[:m], br.row_owner)
+        assert np.array_equal(br2.col_block[:n], br.col_block)
+        m, n, br = m2, n2, br2
+
+
+@pytest.mark.parametrize("seed,p,batches,waves", [
+    (0, 4, 2, True),
+    (1, 1, 3, True),    # p=1: single cell, always affected
+    (2, 3, 2, False),   # sequential-only layout
+    (3, 5, 1, True),
+])
+def test_repack_delta_matches_scratch_pack(seed, p, batches, waves):
+    _check_repack_matches_scratch(seed, p, batches, waves=waves)
+
+
+@settings(max_examples=10, deadline=None)
+@given(**strategies.ARRIVALS)
+def test_repack_delta_matches_scratch_pack_property(seed, p, batches):
+    _check_repack_matches_scratch(seed, p, batches)
+
+
+def test_repack_delta_pure_dimension_growth():
+    """Rows/cols with no ratings yet still extend the packing."""
+    rows, cols, vals = strategies.coo_problem(0, 20, 10, 150)
+    br = P.pack(rows, cols, vals, 20, 10, 3)
+    br2 = P.repack_delta(br, rows, cols, vals, [], [], [], 25, 12)
+    full = P.pack(rows, cols, vals, 25, 12, 3, row_owner=br2.row_owner,
+                  col_block=br2.col_block)
+    _assert_same_packing(br2, full)
+
+
+def test_repack_delta_validation():
+    rows, cols, vals = strategies.coo_problem(0, 20, 10, 100)
+    br = P.pack(rows, cols, vals, 20, 10, 2, sub_blocks=2)
+    with pytest.raises(NotImplementedError, match="sub_blocks"):
+        P.repack_delta(br, rows, cols, vals, [0], [0], [1.0], 20, 10)
+    br1 = P.pack(rows, cols, vals, 20, 10, 2)
+    with pytest.raises(ValueError, match="smaller than base"):
+        P.repack_delta(br1, rows, cols, vals, [], [], [], 10, 10)
+    with pytest.raises(ValueError, match="out of range"):
+        P.repack_delta(br1, rows, cols, vals, [25], [0], [1.0], 22, 10)
+    with pytest.raises(ValueError, match="packed from"):
+        P.repack_delta(br1, rows[:-1], cols[:-1], vals[:-1],
+                       [0], [0], [1.0], 20, 10)
+
+
+# --------------------------------------------------------------------- #
+# 2. partial_fit chain == warm-started batch refit                       #
+# --------------------------------------------------------------------- #
+
+def _stream_problem(seed=0, m=36, n=20, nnz=260):
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    t = strategies.coo_problem(seed + 1, m, n, 50)
+    return api.MCProblem(rows=rows, cols=cols, vals=vals, m=m, n=n,
+                         test=t)
+
+
+def _mk_config(name, kernel="xla"):
+    kw = dict(k=4, lam=0.01, epochs=1, seed=0,
+              schedule=PowerSchedule(alpha=0.04, beta=0.05))
+    if name == "nomad":
+        return api.NomadConfig(**kw, p=2, kernel=kernel)
+    if name == "dsgd":
+        return api.DsgdConfig(**kw, p=2)
+    return api.config_for(name)(**kw)
+
+
+@pytest.mark.parametrize("name,kernel", [
+    ("nomad", "xla"), ("nomad", "wave"), ("dsgd", None)])
+def test_partial_fit_matches_warm_batch_refit(name, kernel):
+    """partial_fit over an arrival script == grow-factors + a single
+    warm-started solve() on the concatenated data, at every batch, for
+    the incremental NOMAD path (both kernels) and DSGD — bitwise."""
+    problem = _stream_problem()
+    cfg = _mk_config(name, kernel)
+    _, script = strategies.arrival_script(7, problem.m, problem.n, 1, 2,
+                                          max_new_ratings=80)
+    res = api.solve(problem, cfg)
+    for b in script:
+        delta = problem.extend(b["rows"], b["cols"], b["vals"],
+                               m_new=b["m_new"], n_new=b["n_new"])
+        res_stream = api.partial_fit(res, delta, cfg)
+
+        # the manual batch path: deterministic factor growth + warm solve
+        W2, H2 = objective.grow_factors(res.W, res.H, b["m_new"],
+                                        b["n_new"], seed=cfg.seed)
+        warm = api.FitResult(
+            W=W2, H=H2, trace_epochs=np.asarray([]),
+            trace_rmse=np.asarray([]), epochs_done=res.epochs_done)
+        ext = res_stream.extras["problem"]
+        if name == "nomad":
+            # the incremental path must have pinned the sticky partition
+            assert ext.row_assign is not None
+        res_batch = api.solve(ext, cfg, warm_start=warm)
+
+        assert np.array_equal(res_stream.W, res_batch.W)
+        assert np.array_equal(res_stream.H, res_batch.H)
+        assert np.array_equal(res_stream.trace_rmse, res_batch.trace_rmse)
+        assert res_stream.epochs_done == res_batch.epochs_done
+        res, problem = res_stream, ext
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_partial_fit_matches_warm_batch_refit_property(seed):
+    """Hypothesis-driven arrival scripts for the NOMAD incremental path."""
+    problem = _stream_problem(seed % 5)
+    cfg = _mk_config("nomad")
+    _, script = strategies.arrival_script(seed, problem.m, problem.n, 1,
+                                          2, max_new_ratings=60)
+    res = api.solve(problem, cfg)
+    for b in script:
+        delta = problem.extend(b["rows"], b["cols"], b["vals"],
+                               m_new=b["m_new"], n_new=b["n_new"])
+        res_stream = api.partial_fit(res, delta, cfg)
+        W2, H2 = objective.grow_factors(res.W, res.H, b["m_new"],
+                                        b["n_new"], seed=cfg.seed)
+        warm = api.FitResult(
+            W=W2, H=H2, trace_epochs=np.asarray([]),
+            trace_rmse=np.asarray([]), epochs_done=res.epochs_done)
+        ext = res_stream.extras["problem"]
+        res_batch = api.solve(ext, cfg, warm_start=warm)
+        assert np.array_equal(res_stream.W, res_batch.W)
+        assert np.array_equal(res_stream.H, res_batch.H)
+        res, problem = res_stream, ext
+
+
+# --------------------------------------------------------------------- #
+# 3. StreamingSession == partial_fit chain                               #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ["nomad", "dsgd", "hogwild"])
+def test_streaming_session_matches_partial_fit_chain(name):
+    problem = _stream_problem(3)
+    cfg = _mk_config(name)
+    _, script = strategies.arrival_script(11, problem.m, problem.n, 1, 2,
+                                          max_new_ratings=70)
+
+    res = api.solve(problem, cfg)
+    pr = problem
+    for b in script:
+        delta = pr.extend(b["rows"], b["cols"], b["vals"],
+                          m_new=b["m_new"], n_new=b["n_new"])
+        res = api.partial_fit(res, delta, cfg)
+        pr = res.extras["problem"]
+
+    sess = api.StreamingSession(problem, cfg)
+    sess.fit()
+    for b in script:
+        sres = sess.arrive(b["rows"], b["cols"], b["vals"],
+                           m_new=b["m_new"], n_new=b["n_new"])
+    assert np.array_equal(sres.W, res.W)
+    assert np.array_equal(sres.H, res.H)
+    assert len(sess.history) == len(script) + 1
+    assert sess.problem.m == pr.m and sess.problem.n == pr.n
+
+
+def test_partial_fit_chain_stays_incremental():
+    """The extended problem handed back in extras['problem'] must carry
+    the incremental packing in its pack cache — otherwise every chained
+    round would re-pack all history from scratch."""
+    problem = _stream_problem(9)
+    cfg = _mk_config("nomad")
+    res = api.solve(problem, cfg)
+    delta = problem.extend([0], [0], [1.0], m_new=2)
+    res = api.partial_fit(res, delta, cfg)
+    ext = res.extras["problem"]
+    policy = cfg.kernel
+    br = ext.packed(cfg.p, balanced=cfg.balanced, waves=policy.wave,
+                    sub_blocks=policy.sub_blocks)
+    assert br is ext._pack_cache[
+        (cfg.p, cfg.balanced, policy.wave, None, policy.sub_blocks)]
+    assert br.m == ext.m and int(br.mask.sum()) == ext.nnz
+
+
+def test_engine_grow_one_sided_override_keeps_seeded_init():
+    """grow(W_new=...) with items also growing must keep the documented
+    seeded draw for the H side, not silently zero-init it."""
+    from repro.core import nomad
+    rows, cols, vals = strategies.coo_problem(2, 20, 10, 150)
+    br = P.pack(rows, cols, vals, 20, 10, 2)
+    eng = nomad.NomadRingEngine(br=br, k=4, lam=0.01,
+                                schedule=PowerSchedule())
+    W0, H0 = objective.init_factors_np(0, 20, 10, 4)
+    W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
+    eng.init_factors(W0, H0)
+    br2 = P.repack_delta(br, rows, cols, vals, [], [], [], 23, 12)
+    my_rows = np.full((3, 4), 0.125, np.float32)
+    eng.grow(br2, seed=4, W_new=my_rows)
+    W, H = eng.factors()
+    assert np.array_equal(W[20:], my_rows)
+    _, H_default = objective.grow_factors(W0, H0, 3, 2, seed=4)
+    assert np.array_equal(H[10:], H_default[10:])
+    with pytest.raises(ValueError, match="W_new must have shape"):
+        eng.grow(br2, W_new=np.zeros((1, 4), np.float32))
+
+
+def test_streaming_session_rejects_non_streaming_solvers():
+    problem = _stream_problem(4)
+    with pytest.raises(NotImplementedError, match="streaming"):
+        api.StreamingSession(problem, _mk_config("als"))
+    res = api.solve(problem, _mk_config("ccdpp"))
+    with pytest.raises(NotImplementedError, match="partial_fit"):
+        api.partial_fit(res, problem.extend(m_new=1))
+
+
+def test_streaming_registry():
+    assert api.streaming_solver_names() == ["dsgd", "hogwild", "nomad"]
+    assert api.supports_partial_fit("nomad")
+    assert api.supports_partial_fit(api.DsgdConfig(k=4))
+    assert not api.supports_partial_fit("als")
+    assert not api.supports_partial_fit(api.AsyncSimConfig)
+
+
+# --------------------------------------------------------------------- #
+# engine growth + factor growth                                          #
+# --------------------------------------------------------------------- #
+
+def test_grow_factors_is_deterministic_and_preserves_old_rows():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(10, 4)).astype(np.float32)
+    H = rng.normal(size=(6, 4)).astype(np.float32)
+    W2, H2 = objective.grow_factors(W, H, 3, 2, seed=5)
+    W3, H3 = objective.grow_factors(W, H, 3, 2, seed=5)
+    assert np.array_equal(W2, W3) and np.array_equal(H2, H3)
+    assert np.array_equal(W2[:10], W) and np.array_equal(H2[:6], H)
+    assert W2.shape == (13, 4) and H2.shape == (8, 4)
+    assert W2.dtype == np.float32
+    # Algorithm 1's init distribution: UniformReal(0, 1/sqrt(k))
+    assert W2[10:].min() >= 0 and W2[10:].max() <= 0.5
+    # different rounds (dims) draw different values
+    W4, _ = objective.grow_factors(W, H, 3, 3, seed=5)
+    assert not np.array_equal(W4[10:], W2[10:])
+
+
+def test_engine_grow_rejects_non_sticky_packing():
+    from repro.core import nomad
+    rows, cols, vals = strategies.coo_problem(0, 20, 10, 150)
+    br = P.pack(rows, cols, vals, 20, 10, 2)
+    eng = nomad.NomadRingEngine(br=br, k=4, lam=0.01,
+                                schedule=PowerSchedule())
+    W0, H0 = objective.init_factors_np(0, 20, 10, 4)
+    eng.init_factors(W0.astype(np.float32), H0.astype(np.float32))
+    # a fresh LPT pack of the extended problem is not a sticky extension
+    rows2 = np.concatenate([rows, [20, 21]])
+    cols2 = np.concatenate([cols, [3, 10]])
+    vals2 = np.concatenate([vals, [1.0, -1.0]])
+    br_fresh = P.pack(rows2, cols2, vals2, 22, 11, 2)
+    sticky = np.array_equal(br_fresh.row_owner[:20], br.row_owner) and \
+        np.array_equal(br_fresh.col_block[:10], br.col_block)
+    if not sticky:
+        with pytest.raises(ValueError, match="sticky"):
+            eng.grow(br_fresh)
+    small_r, small_c, small_v = strategies.coo_problem(1, 15, 10, 60)
+    with pytest.raises(ValueError, match="shrink"):
+        eng.grow(P.pack(small_r, small_c, small_v, 15, 10, 2))
+
+
+# --------------------------------------------------------------------- #
+# delta / problem construction                                           #
+# --------------------------------------------------------------------- #
+
+def test_problem_extend_validates():
+    problem = _stream_problem(5)
+    with pytest.raises(ValueError, match="out of range"):
+        problem.extend([problem.m + 1], [0], [1.0], m_new=1)
+    with pytest.raises(ValueError, match="empty delta"):
+        problem.extend()
+    with pytest.raises(ValueError, match="m_new"):
+        problem.extend(m_new=-1)
+    d = problem.extend([problem.m], [0], [1.0], m_new=1)
+    assert d.m == problem.m + 1 and d.n == problem.n and d.nnz == 1
+
+
+def test_problem_delta_extended_is_memoized_and_correct():
+    problem = _stream_problem(6)
+    extra_test = strategies.coo_problem(9, problem.m, problem.n + 2, 20)
+    d = problem.extend([1], [problem.n], [2.5], n_new=2, test=extra_test)
+    ext = d.extended()
+    assert ext is d.extended()
+    assert ext.nnz == problem.nnz + 1
+    assert ext.n == problem.n + 2
+    assert len(ext.test[0]) == len(problem.test[0]) + 20
+    # pinned partitions are not memoized and land on the problem
+    ro = np.zeros(ext.m, np.int32)
+    co = np.zeros(ext.n, np.int32)
+    pinned = d.extended(row_assign=ro, col_assign=co)
+    assert pinned is not ext
+    assert np.array_equal(pinned.row_assign, ro)
+
+
+def test_problem_assign_pins_partition():
+    problem = _stream_problem(7)
+    ro = np.arange(problem.m, dtype=np.int32) % 2
+    co = np.arange(problem.n, dtype=np.int32) % 2
+    prob = api.MCProblem(rows=problem.rows, cols=problem.cols,
+                         vals=problem.vals, m=problem.m, n=problem.n,
+                         row_assign=ro, col_assign=co)
+    br = prob.packed(2)
+    assert np.array_equal(br.row_owner, ro)
+    assert np.array_equal(br.col_block, co)
+    with pytest.raises(ValueError, match="row_assign"):
+        api.MCProblem(rows=[0], cols=[0], vals=[1.0], m=2, n=2,
+                      row_assign=[0])
+
+
+# --------------------------------------------------------------------- #
+# arrival stream generator + simulator config plumbing                   #
+# --------------------------------------------------------------------- #
+
+def test_rating_arrival_stream_is_replayable():
+    from repro.data import RatingArrivalStream
+    stream = RatingArrivalStream(m0=40, n0=20, nnz0=300, batches=3,
+                                 nnz_batch=50, m_growth=4, n_growth=2,
+                                 k=4, seed=3)
+    p1 = stream.initial_problem()
+    p2 = stream.initial_problem()
+    assert np.array_equal(p1.rows, p2.rows)
+    assert np.array_equal(p1.vals, p2.vals)
+    assert (p1.m, p1.n) == (40, 20)
+    batches = list(stream)
+    assert len(batches) == 3
+    for t, b in enumerate(batches):
+        again = stream.batch_at(t)
+        for key in ("rows", "cols", "vals"):
+            assert np.array_equal(b[key], again[key])
+        m_hi, n_hi = stream.dims_at(t)
+        assert b["rows"].max() < m_hi and b["cols"].max() < n_hi
+    assert stream.dims_at(2) == (stream.m_final, stream.n_final) == (52, 26)
+    # the script drives a session end-to-end
+    sess = api.StreamingSession(p1, _mk_config("nomad"))
+    sess.fit()
+    for b in batches:
+        res = sess.arrive(**b)
+    assert sess.problem.m == 52 and np.isfinite(res.rmse[-1])
+
+
+def test_async_sim_arrivals_config_validation():
+    with pytest.raises(ValueError, match="nomad"):
+        api.AsyncSimConfig(mode="dsgd", arrivals=((1.0, (0,)),))
+    with pytest.raises(ValueError, match=">= 0"):
+        api.AsyncSimConfig(arrivals=((-1.0, (0,)),))
+    cfg = api.AsyncSimConfig(arrivals=((1.0, (0, 1)),))
+    assert cfg.to_sim_config().arrivals == ((1.0, (0, 1)),)
+
+
+def test_async_sim_solver_with_arrivals():
+    """Late ratings flow through the registry path and still converge
+    (the sim itself is property-tested in test_serializability)."""
+    problem = _stream_problem(8)
+    late = tuple(range(problem.nnz - 60, problem.nnz))
+    cfg = api.AsyncSimConfig(k=4, lam=0.01, epochs=1.5, seed=0, p=3,
+                             arrivals=((50.0, late),),
+                             schedule=PowerSchedule(alpha=0.04, beta=0.05))
+    res = api.solve(problem, cfg)
+    assert res.extras["n_updates"] > 0
+    touched = {g for _, g in res.extras["update_log"]}
+    assert touched & set(late)

@@ -10,6 +10,7 @@ from repro.core.async_sim import NomadSimulator, SimConfig, simulate_dsgd
 from repro.core.stepsize import PowerSchedule
 
 
+@pytest.mark.slow
 def test_nomad_fit_converges(tiny_mc_problem):
     pr = tiny_mc_problem
     rows, cols, vals = pr["train"]

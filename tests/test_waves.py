@@ -11,25 +11,17 @@ without hypothesis installed.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis_compat import given, settings, st
+import strategies
+from hypothesis_compat import given, settings
 
 from repro.core import partition as P
 from repro.kernels import ref
 from repro.kernels.nomad_sgd import nomad_sgd_waves_block
 
 
-def _random_cell(rng, m_t, n_t, k, nnz):
-    W = jnp.asarray(rng.normal(size=(m_t, k)), jnp.float32)
-    H = jnp.asarray(rng.normal(size=(n_t, k)), jnp.float32)
-    rows = rng.integers(0, m_t, nnz)
-    cols = rng.integers(0, n_t, nnz)
-    vals = rng.normal(size=nnz).astype(np.float32)
-    return W, H, rows, cols, vals
-
-
 def _check_waves_match_ref(seed, m_t, n_t, k, nnz, pallas=False):
     rng = np.random.default_rng(seed)
-    W, H, rows, cols, vals = _random_cell(rng, m_t, n_t, k, nnz)
+    W, H, rows, cols, vals = strategies.random_cell(rng, m_t, n_t, k, nnz)
     pre = np.lexsort((rows, cols))           # pack()'s within-cell order
     order, wr, wc, wv, wm, _ = P.pack_cell_waves(
         rows[pre], cols[pre], vals[pre])
@@ -68,17 +60,13 @@ def test_pallas_wave_kernel_matches_sequential_oracle(seed, m_t, n_t, k,
 
 
 @settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000), k=st.sampled_from([4, 8, 100]),
-       nnz=st.integers(1, 300))
+@given(**strategies.WAVE_CELL)
 def test_block_sgd_waves_property(seed, k, nnz):
     _check_waves_match_ref(seed, 24, 12, k, nnz, pallas=False)
 
 
 def _check_pack_waves(seed, p, m, n, nnz, sub_blocks=1):
-    rng = np.random.default_rng(seed)
-    rows = rng.integers(0, m, nnz)
-    cols = rng.integers(0, n, nnz)
-    vals = rng.normal(size=nnz)
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
     br = P.pack(rows, cols, vals, m, n, p, sub_blocks=sub_blocks)
 
     # every rating appears exactly once across all waves of all cells
@@ -115,9 +103,7 @@ def test_pack_wave_layout_is_conflict_free_partition(seed, p, m, n, nnz,
 
 
 @settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000), p=st.integers(1, 6),
-       m=st.integers(4, 50), n=st.integers(4, 30),
-       nnz=st.integers(1, 400), sub=st.integers(1, 3))
+@given(**strategies.PACK_SHAPE)
 def test_pack_wave_layout_property(seed, p, m, n, nnz, sub):
     _check_pack_waves(seed, p, m, n, nnz, sub_blocks=sub)
 
