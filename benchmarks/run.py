@@ -64,7 +64,7 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
-    from . import stream_bench
+    from . import schedule_bench, stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -80,6 +80,7 @@ def main() -> None:
         ("kernel", kernel_bench.kernel_rows),
         ("solver", solver_bench.solver_rows),
         ("stream", stream_bench.stream_rows),
+        ("schedule", schedule_bench.schedule_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -92,7 +93,7 @@ def main() -> None:
             rows = fn()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
-            if name in ("kernel", "solver", "stream"):
+            if name in ("kernel", "solver", "stream", "schedule"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

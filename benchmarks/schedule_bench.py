@@ -1,0 +1,83 @@
+"""Ownership-schedule sweep (DESIGN.md §8): what does routing cost?
+
+Two families of rows, both recorded under ``schedule/`` in
+``BENCH_kernels.json``:
+
+* ``schedule/engine_*`` — real-engine wall time per epoch under ring /
+  random / balanced schedules on the same packed problem.  A compiled
+  random schedule needs ``n_steps > p`` conflict-free steps (queueing
+  collisions), so its epoch carries proportional idle padding; the
+  queue-aware balanced constructor compresses most of that back out —
+  the static mirror of the paper's §3.3 result.
+* ``schedule/sim_*`` — discrete-event simulator throughput for uniform
+  vs queue-aware routing, with and without stragglers (speed of one
+  worker cut to 1/4).  This is the virtual-time prediction the engine
+  rows are the device-level counterpart of.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core.async_sim import NomadSimulator, SimConfig
+from repro.core.objective import init_factors_np
+from repro.core.stepsize import PowerSchedule
+from .common import small_netflix
+
+_P, _K, _EPOCHS = 8, 8, 3
+
+
+def _engine_rows(out: list) -> None:
+    pr = small_netflix(k=_K)
+    problem = api.MCProblem(rows=pr["train"][0], cols=pr["train"][1],
+                            vals=pr["train"][2], m=pr["m"], n=pr["n"],
+                            test=pr["test"])
+    for spec in ("ring", "random", "balanced"):
+        cfg = api.NomadConfig(k=_K, p=_P, lam=0.01, epochs=_EPOCHS,
+                              kernel="wave", schedule=spec,
+                              schedule_seed=0,
+                              stepsize=PowerSchedule(alpha=0.05,
+                                                     beta=0.02))
+        api.solve(problem, cfg)               # jit warm-up
+        warm = api.solve(problem, cfg)        # steady-state timing
+        br = problem.packed(_P, waves=True, schedule=spec,
+                            schedule_seed=0)
+        ups = problem.nnz * _EPOCHS / max(warm.wall_time, 1e-9)
+        rmse = float(warm.trace_rmse[-1])
+        out.append((f"schedule/engine_{spec}",
+                    warm.wall_time * 1e6 / _EPOCHS,
+                    f"n_steps={br.n_steps} updates_per_s={ups:.0f} "
+                    f"rmse={rmse:.4f}"))
+
+
+def _sim_rows(out: list) -> None:
+    pr = small_netflix(k=_K)
+    rows, cols, vals = pr["train"]
+    W0, H0 = init_factors_np(0, pr["m"], pr["n"], _K)
+    for straggle in (False, True):
+        speed = None
+        if straggle:
+            speed = np.ones(_P)
+            speed[0] = 0.25
+        for lb, name in ((False, "uniform"), (True, "balanced")):
+            cfg = SimConfig(p=_P, k=_K, lam=0.01,
+                            schedule=PowerSchedule(alpha=0.05, beta=0.02),
+                            epochs=1.0, seed=0, load_balance=lb,
+                            speed=speed)
+            t0 = time.perf_counter()
+            res = NomadSimulator(cfg, pr["m"], pr["n"], rows, cols, vals,
+                                 W0, H0).run()
+            wall_us = (time.perf_counter() - t0) * 1e6
+            tag = f"sim_{name}" + ("_straggler" if straggle else "")
+            out.append((f"schedule/{tag}", wall_us,
+                        f"throughput={res.throughput:.4f} "
+                        f"virtual_time={res.sim_time:.0f}"))
+
+
+def schedule_rows() -> list:
+    out: list = []
+    _engine_rows(out)
+    _sim_rows(out)
+    return out

@@ -23,7 +23,7 @@ _M, _N, _NNZ, _K, _EPOCHS = 600, 240, 24_000, 16, 4
 
 def _configs():
     sched = PowerSchedule(alpha=0.05, beta=0.02)
-    base = dict(k=_K, lam=0.01, epochs=_EPOCHS, seed=0, schedule=sched)
+    base = dict(k=_K, lam=0.01, epochs=_EPOCHS, seed=0, stepsize=sched)
     return {
         "nomad": api.NomadConfig(**base, p=4, kernel="xla"),
         # wave path: conflict-free but wave count tracks the max item

@@ -50,7 +50,7 @@ vals = np.sum(Wt[rows] * Ht[cols], -1) + 0.02 * rng.normal(size=4000)
 problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=m, n=n,
                         test=(rows, cols, vals))
 config = api.NomadConfig(k=k, lam=0.01, epochs=10, p=p,
-                         schedule=PowerSchedule(alpha=0.1, beta=0.01))
+                         stepsize=PowerSchedule(alpha=0.1, beta=0.01))
 spmd = api.solve(problem, config, mesh=mesh)    # real ppermute collectives
 local = api.solve(problem, config)              # single-device emulation
 print(f"SPMD ring engine on {p} devices: train RMSE after 10 epochs: "

@@ -17,7 +17,7 @@ result = api.solve(
         k=16,
         p=8,                                   # 8 NOMAD workers (ring)
         lam=0.01,
-        schedule=PowerSchedule(alpha=0.1, beta=0.01),   # eq. (11)
+        stepsize=PowerSchedule(alpha=0.1, beta=0.01),   # eq. (11)
         epochs=15,
         kernel="wave",                         # conflict-free vectorized path
     ),
@@ -28,5 +28,5 @@ print(f"final test RMSE: {result.rmse[-1]:.4f}  "
 
 # the same problem, swept through a baseline with zero glue:
 dsgd = api.solve(problem, api.DsgdConfig(k=16, p=8, lam=0.01, epochs=15,
-                                         schedule=PowerSchedule(0.1, 0.01)))
+                                         stepsize=PowerSchedule(0.1, 0.01)))
 print(f"DSGD for comparison: {dsgd.rmse[-1]:.4f}")

@@ -50,7 +50,7 @@ def main():
 
     cfg_cls = api.config_for(args.solver)
     kw = dict(k=args.k, lam=0.01, epochs=args.epochs, seed=0,
-              schedule=PowerSchedule(alpha=0.05, beta=0.02))
+              stepsize=PowerSchedule(alpha=0.05, beta=0.02))
     if args.solver == "nomad":
         kw.update(p=args.p, kernel=args.impl)
     elif args.solver == "dsgd":

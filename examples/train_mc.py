@@ -56,7 +56,7 @@ def main():
     config = api.NomadConfig(
         k=args.k, lam=args.lam, epochs=args.ckpt_every, seed=0, p=args.p,
         kernel=args.impl,
-        schedule=PowerSchedule(alpha=args.alpha, beta=args.beta))
+        stepsize=PowerSchedule(alpha=args.alpha, beta=args.beta))
 
     # key the checkpoint dir by problem signature so a re-run with a
     # different --scale starts fresh instead of restoring stale shapes;

@@ -35,20 +35,22 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple, Type, Union
 
 import numpy as np
 
 from .core import partition as part
+from .core.schedule import OwnershipSchedule, SCHEDULE_NAMES
 from .core.stepsize import PowerSchedule
 from .kernels.policy import KernelPolicy
 
 __all__ = [
     "MCProblem", "ProblemDelta", "SolverConfig", "NomadConfig",
     "DsgdConfig", "CcdConfig", "AlsConfig", "HogwildConfig",
-    "AsyncSimConfig", "FitResult", "KernelPolicy", "solve",
-    "register_solver", "solver_names", "config_for", "partial_fit",
-    "register_partial_fit", "supports_partial_fit",
+    "AsyncSimConfig", "FitResult", "KernelPolicy", "OwnershipSchedule",
+    "solve", "register_solver", "solver_names", "config_for",
+    "partial_fit", "register_partial_fit", "supports_partial_fit",
     "streaming_solver_names", "StreamingSession",
 ]
 
@@ -101,6 +103,12 @@ class MCProblem:
     #: an extended problem executes the identical serial order
     row_assign: Optional[np.ndarray] = None
     col_assign: Optional[np.ndarray] = None
+    #: optional pinned ownership schedule, the schedule-IR twin of the
+    #: partition pins: when set, :meth:`packed` lays out for exactly this
+    #: schedule regardless of the spec it is called with (a "balanced"
+    #: spec re-resolved against extended data would drift; the pin keeps
+    #: a streaming chain and its batch comparators on one schedule)
+    schedule_pin: Optional[OwnershipSchedule] = None
 
     def __post_init__(self):
         r, c, v = _frozen_coo(self.rows, self.cols, self.vals)
@@ -124,6 +132,11 @@ class MCProblem:
                         f"{assign.shape}")
                 assign.flags.writeable = False
                 object.__setattr__(self, name, assign)
+        if self.schedule_pin is not None and not isinstance(
+                self.schedule_pin, OwnershipSchedule):
+            raise TypeError(
+                f"schedule_pin must be an OwnershipSchedule, got "
+                f"{type(self.schedule_pin).__name__}")
         object.__setattr__(self, "_pack_cache", {})
 
     def _check_bounds(self, which, r, c):
@@ -145,24 +158,50 @@ class MCProblem:
         return self.rows, self.cols, self.vals
 
     @staticmethod
-    def _pack_key(p, balanced, waves, wave_width, sub_blocks):
+    def _pack_key(p, balanced, waves, wave_width, sub_blocks,
+                  schedule=None, schedule_seed=0):
         """The memo-cache key of :meth:`packed` — also used by the
         streaming layer to pre-seed an extended problem's cache with the
-        incrementally re-packed layout."""
-        return (p, balanced, waves, wave_width, sub_blocks)
+        incrementally re-packed layout.  ``schedule`` may be a spec name
+        or an (hashable) ``OwnershipSchedule``; equivalent ring specs
+        (``None``, ``"ring"``, an explicit ring schedule — whose layout
+        is identical and seed-independent) normalize to one key so the
+        default packing is never computed twice."""
+        if schedule is None:
+            schedule = "ring"
+        elif isinstance(schedule, OwnershipSchedule):
+            if schedule.is_ring:
+                schedule = "ring"
+            else:
+                schedule_seed = 0   # seed only feeds the named specs
+        if schedule == "ring":
+            schedule_seed = 0
+        return (p, balanced, waves, wave_width, sub_blocks,
+                schedule, schedule_seed)
 
     def packed(self, p: int, *, balanced: bool = True, waves: bool = False,
-               wave_width: Optional[int] = None,
-               sub_blocks: int = 1) -> part.BlockedRatings:
-        """Memoized ``partition.pack`` of the training ratings."""
-        key = self._pack_key(p, balanced, waves, wave_width, sub_blocks)
+               wave_width: Optional[int] = None, sub_blocks: int = 1,
+               schedule: Union[str, OwnershipSchedule, None] = None,
+               schedule_seed: int = 0) -> part.BlockedRatings:
+        """Memoized ``partition.pack`` of the training ratings.
+
+        ``schedule`` selects the ownership-transfer order the cells are
+        laid out for (``None``/``"ring"``/``"random"``/``"balanced"`` or
+        an explicit ``OwnershipSchedule``; see ``partition.pack``).  A
+        :attr:`schedule_pin` overrides it, exactly as
+        ``row_assign``/``col_assign`` override the computed partition."""
+        if self.schedule_pin is not None:
+            schedule = self.schedule_pin
+        key = self._pack_key(p, balanced, waves, wave_width, sub_blocks,
+                             schedule, schedule_seed)
         cache = self._pack_cache
         if key not in cache:
             cache[key] = part.pack(
                 self.rows, self.cols, self.vals, self.m, self.n, p,
                 balanced=balanced, waves=waves, wave_width=wave_width,
                 sub_blocks=sub_blocks, row_owner=self.row_assign,
-                col_block=self.col_assign)
+                col_block=self.col_assign, schedule=schedule,
+                schedule_seed=schedule_seed)
         return cache[key]
 
     def extend(self, rows=(), cols=(), vals=(), *, m_new: int = 0,
@@ -278,14 +317,17 @@ class ProblemDelta:
         return tuple(np.concatenate([a, b])
                      for a, b in zip(self.base.test, self.test))
 
-    def extended(self, *, row_assign=None,
-                 col_assign=None) -> MCProblem:
+    def extended(self, *, row_assign=None, col_assign=None,
+                 schedule_pin=None) -> MCProblem:
         """Materialize the concatenated problem (the default call is
         memoized; pinned builds are not).  ``row_assign``/``col_assign``
-        pin an explicit partition — the streaming layer passes the sticky
-        assignment from the incremental re-pack so a batch ``solve`` of
-        this problem runs the identical serial linearization."""
-        plain = row_assign is None and col_assign is None
+        pin an explicit partition and ``schedule_pin`` an explicit
+        ownership schedule — the streaming layer passes the sticky
+        assignment and schedule from the incremental re-pack so a batch
+        ``solve`` of this problem runs the identical serial
+        linearization."""
+        plain = (row_assign is None and col_assign is None
+                 and schedule_pin is None)
         if plain and "ext" in self._ext_cache:
             return self._ext_cache["ext"]
         prob = MCProblem(
@@ -294,7 +336,8 @@ class ProblemDelta:
             vals=np.concatenate([self.base.vals, self.vals]),
             m=self.m, n=self.n, test=self.merged_test,
             val=self.base.val, dtype=self.base.dtype,
-            row_assign=row_assign, col_assign=col_assign)
+            row_assign=row_assign, col_assign=col_assign,
+            schedule_pin=schedule_pin)
         if plain:
             self._ext_cache["ext"] = prob
         return prob
@@ -307,16 +350,27 @@ class ProblemDelta:
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
     """Hyperparameters shared by every solver.  Frozen: validation happens
-    once, at construction."""
+    once, at construction.  ``stepsize`` is the per-epoch SGD step-size
+    schedule, eq. (11) (the field was named ``schedule`` before the
+    ownership-schedule IR claimed that word; a ``PowerSchedule`` passed
+    as ``schedule=`` still works on every config, with a
+    ``DeprecationWarning``)."""
     k: int = 16
     lam: float = 0.05
     epochs: float = 10
     seed: int = 0
-    schedule: Optional[PowerSchedule] = None
+    stepsize: Optional[PowerSchedule] = None
+    #: deprecated alias of ``stepsize`` (accepts a ``PowerSchedule``
+    #: only); :class:`NomadConfig` re-purposes the field as the
+    #: ownership-transfer schedule spec
+    schedule: Any = None
 
     #: epoch-based solvers require integral epochs; only the simulator
     #: (virtual time) can stop mid-epoch
     _fractional_epochs = False
+    #: NomadConfig flips this: its ``schedule`` field selects the
+    #: OwnershipSchedule instead of erroring on leftover values
+    _schedule_is_ownership = False
 
     def __post_init__(self):
         if self.k < 1:
@@ -328,25 +382,76 @@ class SolverConfig:
                 f"epochs must be integral for {type(self).__name__}, got "
                 f"{self.epochs} (fractional epochs exist only for "
                 "AsyncSimConfig)")
+        if isinstance(self.schedule, PowerSchedule):
+            # pre-IR call sites passed the step-size schedule here.  The
+            # warning must point at the *caller*: above this frame sit
+            # one super().__post_init__ frame per overriding subclass,
+            # then the dataclass-generated __init__.
+            depth = sum(1 for klass in type(self).__mro__
+                        if "__post_init__" in vars(klass)
+                        and klass is not SolverConfig)
+            warnings.warn(
+                f"{type(self).__name__}(schedule=PowerSchedule(...)) is "
+                "deprecated; the step-size schedule is now `stepsize=`"
+                + (" (`schedule=` selects the ownership-transfer order)"
+                   if self._schedule_is_ownership else ""),
+                DeprecationWarning, stacklevel=3 + depth)
+            if self.stepsize is not None:
+                raise ValueError(
+                    "both stepsize= and a PowerSchedule passed as "
+                    "schedule=; use stepsize= only")
+            object.__setattr__(self, "stepsize", self.schedule)
+            object.__setattr__(
+                self, "schedule",
+                type(self).__dataclass_fields__["schedule"].default)
+        elif self.schedule is not None and not self._schedule_is_ownership:
+            raise ValueError(
+                f"{type(self).__name__} has no ownership schedule; "
+                "schedule= accepts only a legacy PowerSchedule (the "
+                "step-size schedule, now spelled stepsize=)")
 
-    def make_schedule(self) -> PowerSchedule:
-        return self.schedule or PowerSchedule()
+    def make_stepsize(self) -> PowerSchedule:
+        return self.stepsize or PowerSchedule()
 
 
 @dataclasses.dataclass(frozen=True)
 class NomadConfig(SolverConfig):
-    """NOMAD ring engine (local emulation, or SPMD when ``solve`` gets a
+    """NOMAD engine (local emulation, or SPMD when ``solve`` gets a
     mesh).  ``kernel`` is a :class:`KernelPolicy` or a legacy impl string;
-    ``sub_blocks`` merges into the policy."""
+    ``sub_blocks`` merges into the policy.
+
+    ``schedule`` selects the ownership-transfer order (DESIGN.md §8):
+    ``"ring"`` (canonical rotation, bitwise-preserves the historical
+    engine), ``"random"`` (Alg. 1 line 22 routing compiled to
+    conflict-free steps; ``schedule_seed`` seeds it), ``"balanced"``
+    (§3.3 queue-aware routing weighted by per-cell nnz), or an explicit
+    :class:`OwnershipSchedule` — e.g. the replayable schedule an
+    ``AsyncSimConfig(emit_schedule=True)`` run leaves in
+    ``FitResult.extras["schedule"]``."""
     p: int = 4
     kernel: Union[str, KernelPolicy] = "xla"
     balanced: bool = True
     sub_blocks: int = 1
+    schedule: Union[str, OwnershipSchedule] = "ring"
+    schedule_seed: int = 0
+
+    _schedule_is_ownership = True
 
     def __post_init__(self):
-        super().__post_init__()
+        super().__post_init__()   # legacy PowerSchedule-as-schedule shim
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.schedule is None:  # None == ring everywhere (resolve/pack)
+            object.__setattr__(self, "schedule", "ring")
+        if isinstance(self.schedule, OwnershipSchedule):
+            if self.schedule.p != self.p:
+                raise ValueError(
+                    f"schedule is for p={self.schedule.p}, but config has "
+                    f"p={self.p}")
+        elif self.schedule not in SCHEDULE_NAMES:
+            raise ValueError(
+                f"schedule={self.schedule!r} not in {SCHEDULE_NAMES} (or "
+                "pass an OwnershipSchedule)")
         # coercion validates impl x sub_blocks at construction time
         object.__setattr__(self, "kernel",
                            KernelPolicy.coerce(self.kernel,
@@ -411,11 +516,20 @@ class AsyncSimConfig(SolverConfig):
     #: the listed training ratings stay invisible until their batch's
     #: virtual time (streaming workload; NOMAD mode only)
     arrivals: Tuple[Tuple[float, Tuple[int, ...]], ...] = ()
+    #: compile the simulated run's ownership transfers into a replayable
+    #: ``OwnershipSchedule`` (``FitResult.extras["schedule"]``; NOMAD
+    #: mode only) — feed it back as ``NomadConfig(schedule=...)`` to
+    #: replay the predicted routing on the real engine
+    emit_schedule: bool = False
 
     def __post_init__(self):
         super().__post_init__()
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.emit_schedule and self.mode != "nomad":
+            raise ValueError(
+                "emit_schedule requires mode='nomad' (the bulk-"
+                "synchronous baselines already execute a fixed schedule)")
         if self.mode not in ("nomad", "dsgd", "dsgd++"):
             raise ValueError(
                 f"mode={self.mode!r} not in ('nomad', 'dsgd', 'dsgd++')")
@@ -440,7 +554,7 @@ class AsyncSimConfig(SolverConfig):
         from .core.async_sim import SimConfig
         return SimConfig(
             p=self.p, k=self.k, lam=self.lam,
-            schedule=self.make_schedule(), a=self.a, c=self.c,
+            schedule=self.make_stepsize(), a=self.a, c=self.c,
             epochs=float(self.epochs), load_balance=self.load_balance,
             speed=(None if self.speed is None
                    else np.asarray(self.speed, dtype=np.float64)),
@@ -666,7 +780,7 @@ def partial_fit(result: FitResult, delta: ProblemDelta,
 def _nomad_engine(br, config: NomadConfig, mesh):
     from .core.nomad import NomadRingEngine
     return NomadRingEngine(br=br, k=config.k, lam=config.lam,
-                           schedule=config.make_schedule(),
+                           stepsize=config.make_stepsize(),
                            policy=config.kernel, mesh=mesh)
 
 
@@ -684,10 +798,11 @@ def _nomad_run(eng, config: NomadConfig, test, start,
 
 def _streaming_repack(base_br, base_problem: MCProblem,
                       delta: ProblemDelta, config: NomadConfig):
-    """Extended packing under the sticky partition: the incremental
-    delta re-pack when the layout supports it, a from-scratch pack pinned
-    to the extended sticky assignment otherwise (sub-block boundaries
-    move when n_local grows, so the pipelined layout cannot be patched)."""
+    """Extended packing under the sticky partition *and* sticky
+    ownership schedule: the incremental delta re-pack when the layout
+    supports it, a from-scratch pack pinned to the extended sticky
+    assignment otherwise (sub-block boundaries move when n_local grows,
+    so the pipelined layout cannot be patched)."""
     if config.kernel.sub_blocks == 1:
         return part.repack_delta(
             base_br, base_problem.rows, base_problem.cols,
@@ -702,22 +817,26 @@ def _streaming_repack(base_br, base_problem: MCProblem,
         np.concatenate([base_problem.vals, delta.vals]),
         delta.m, delta.n, config.p, waves=config.kernel.wave,
         sub_blocks=config.kernel.sub_blocks, row_owner=row_owner,
-        col_block=col_block)
+        col_block=col_block, schedule=base_br.schedule)
 
 
 def _sticky_extended_problem(delta: ProblemDelta, br,
                              config: NomadConfig) -> MCProblem:
-    """The extended problem pinned to ``br``'s sticky partition, with its
-    pack cache pre-seeded with ``br`` — so the next round's
-    ``delta.base.packed(...)`` (or a batch ``solve``) is a cache hit
-    instead of an O(total nnz) from-scratch re-pack of all history.
-    (``br`` is exactly what that pack would produce: same assignment,
-    property-tested bitwise in tests/test_streaming.py.)"""
-    ext = delta.extended(row_assign=br.row_owner, col_assign=br.col_block)
+    """The extended problem pinned to ``br``'s sticky partition *and*
+    sticky (resolved) ownership schedule, with its pack cache pre-seeded
+    with ``br`` — so the next round's ``delta.base.packed(...)`` (or a
+    batch ``solve``) is a cache hit instead of an O(total nnz)
+    from-scratch re-pack of all history.  (``br`` is exactly what that
+    pack would produce: same assignment, and ``schedule_pin`` keeps even
+    a data-dependent "balanced" spec from re-resolving against the
+    extended loads; property-tested bitwise in tests/test_streaming.py
+    and tests/test_schedule.py.)"""
+    ext = delta.extended(row_assign=br.row_owner, col_assign=br.col_block,
+                         schedule_pin=br.schedule)
     policy = config.kernel
     ext._pack_cache[MCProblem._pack_key(
-        config.p, config.balanced, policy.wave, None,
-        policy.sub_blocks)] = br
+        config.p, config.balanced, policy.wave, None, policy.sub_blocks,
+        br.schedule, 0)] = br
     return ext
 
 
@@ -732,7 +851,9 @@ def _nomad_cold_start(problem: MCProblem, config: NomadConfig, mesh,
 
     policy = config.kernel
     br = problem.packed(config.p, balanced=config.balanced,
-                        waves=policy.wave, sub_blocks=policy.sub_blocks)
+                        waves=policy.wave, sub_blocks=policy.sub_blocks,
+                        schedule=config.schedule,
+                        schedule_seed=config.schedule_seed)
     eng = _nomad_engine(br, config, mesh)
     W0, H0, start = _warm_factors(warm_start, dtype=problem.dtype)
     if W0 is None:
@@ -758,7 +879,9 @@ def _partial_fit_nomad(result: FitResult, delta: ProblemDelta,
     policy = config.kernel
     base_br = delta.base.packed(config.p, balanced=config.balanced,
                                 waves=policy.wave,
-                                sub_blocks=policy.sub_blocks)
+                                sub_blocks=policy.sub_blocks,
+                                schedule=config.schedule,
+                                schedule_seed=config.schedule_seed)
     br = _streaming_repack(base_br, delta.base, delta, config)
     eng = _nomad_engine(br, config, mesh)
     W0, H0 = grow_factors(
@@ -814,7 +937,7 @@ def _solve_dsgd(problem: MCProblem, config: DsgdConfig, *, mesh=None,
     W, H, trace = baselines.dsgd(
         problem.rows, problem.cols, problem.vals, problem.m, problem.n,
         config.k, config.p, lam=config.lam, epochs=int(config.epochs),
-        schedule=config.make_schedule(), seed=config.seed,
+        schedule=config.make_stepsize(), seed=config.seed,
         test=problem.test, W0=W0, H0=H0, start_epoch=int(start))
     epochs, rmses = _as_trace_arrays(trace)
     return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
@@ -859,7 +982,7 @@ def _solve_hogwild(problem: MCProblem, config: HogwildConfig, *, mesh=None,
     W, H, trace = baselines.hogwild(
         problem.rows, problem.cols, problem.vals, problem.m, problem.n,
         config.k, lam=config.lam, epochs=int(config.epochs),
-        batch=config.batch, schedule=config.make_schedule(),
+        batch=config.batch, schedule=config.make_stepsize(),
         seed=config.seed, test=problem.test, W0=W0, H0=H0,
         start_epoch=int(start))
     epochs, rmses = _as_trace_arrays(trace)
@@ -891,16 +1014,27 @@ def _solve_async_sim(problem: MCProblem, config: AsyncSimConfig, *,
     epochs = np.asarray([start + upd / nnz for _, upd, _ in res.trace],
                         dtype=np.float64)
     rmses = np.asarray([r for _, _, r in res.trace], dtype=np.float64)
+    extras = {"n_updates": res.n_updates,
+              "throughput": res.throughput,
+              "busy_time": res.busy_time,
+              "trace_virtual_time": np.asarray(
+                  [t for t, _, _ in res.trace], dtype=np.float64),
+              "update_log": res.update_log}
+    if config.emit_schedule:
+        # compile the simulated ownership transfers into a schedule the
+        # real engine replays.  The item blocks are the nnz-balanced
+        # assignment pack(balanced=True) computes for this problem, so a
+        # plain NomadConfig(schedule=extras["schedule"]) replay lines the
+        # blocks up with the compiled visits automatically.
+        from .core.partition import balanced_assign
+        col_cnt = np.bincount(problem.cols, minlength=problem.n)
+        col_block = balanced_assign(col_cnt, config.p)
+        extras["schedule"] = OwnershipSchedule.from_sim_log(
+            res, col_block, p=config.p)
     return FitResult(
         W=res.W, H=res.H, trace_epochs=epochs, trace_rmse=rmses,
         epochs_done=float(start) + res.n_updates / nnz,
-        virtual_time=res.sim_time,
-        extras={"n_updates": res.n_updates,
-                "throughput": res.throughput,
-                "busy_time": res.busy_time,
-                "trace_virtual_time": np.asarray(
-                    [t for t, _, _ in res.trace], dtype=np.float64),
-                "update_log": res.update_log})
+        virtual_time=res.sim_time, extras=extras)
 
 
 # ---------------------------------------------------------------------- #

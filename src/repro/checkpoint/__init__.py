@@ -1,5 +1,5 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step, \
-    AsyncCheckpointer
+    AsyncCheckpointer, save_fit_result, restore_fit_result
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "AsyncCheckpointer", "save_fit_result", "restore_fit_result"]

@@ -13,15 +13,24 @@ Layout:   <dir>/step_<N>/shard_<r>.npz  +  <dir>/step_<N>/COMMITTED
   (compute/IO overlap, the checkpointing twin of the paper's
   compute/communication overlap).
 * resumable: ``latest_step`` scans for the newest COMMITTED step.
+
+``save_fit_result``/``restore_fit_result`` round-trip a full
+``repro.api.FitResult`` — factors, trace arrays, epochs done, timings,
+and the exact solver config (including a ``KernelPolicy``, the step-size
+``PowerSchedule`` and an ``OwnershipSchedule``) — so a warm-start /
+``partial_fit`` chain survives a process restart bitwise
+(``solve(problem, cfg, warm_start=restored)`` equals the uninterrupted
+run; asserted in tests/test_checkpoint.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import jax.numpy as jnp
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -93,6 +102,137 @@ def restore_checkpoint(ckpt_dir: str, tree_like: Any,
         # cast via jnp: handles bf16 & friends that numpy can't cast to
         leaves.append(np.asarray(jnp.asarray(arr).astype(leaf.dtype)))
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+# --------------------------------------------------------------------- #
+# FitResult round-trip (matrix-completion warm-start chains)              #
+# --------------------------------------------------------------------- #
+
+def _encode_value(v):
+    """JSON-encode a config field value, tagging the repo's frozen
+    hyperparameter objects so restore can rebuild them."""
+    from ..core.schedule import OwnershipSchedule
+    from ..core.stepsize import PowerSchedule
+    from ..kernels.policy import KernelPolicy
+    if isinstance(v, PowerSchedule):
+        return {"__type__": "PowerSchedule", **dataclasses.asdict(v)}
+    if isinstance(v, KernelPolicy):
+        return {"__type__": "KernelPolicy", **dataclasses.asdict(v)}
+    if isinstance(v, OwnershipSchedule):
+        return {"__type__": "OwnershipSchedule", "p": int(v.p),
+                "name": v.name,
+                "table": np.asarray(v.table).tolist(),
+                "active": np.asarray(v.active).astype(int).tolist()}
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, (tuple, list)):
+        return {"__type__": "tuple",
+                "items": [_encode_value(x) for x in v]}
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    raise TypeError(
+        f"cannot checkpoint config field of type {type(v).__name__}")
+
+
+def _decode_value(v):
+    if not (isinstance(v, dict) and "__type__" in v):
+        return v
+    from ..core.schedule import OwnershipSchedule
+    from ..core.stepsize import PowerSchedule
+    from ..kernels.policy import KernelPolicy
+    t = v["__type__"]
+    if t == "PowerSchedule":
+        return PowerSchedule(alpha=v["alpha"], beta=v["beta"])
+    if t == "KernelPolicy":
+        return KernelPolicy(**{k: x for k, x in v.items()
+                               if k != "__type__"})
+    if t == "OwnershipSchedule":
+        return OwnershipSchedule(
+            p=v["p"], table=np.asarray(v["table"], dtype=np.int32),
+            active=np.asarray(v["active"], dtype=bool), name=v["name"])
+    if t == "tuple":
+        return tuple(_decode_value(x) for x in v["items"])
+    raise ValueError(f"unknown checkpoint value tag {t!r}")
+
+
+def _encode_config(cfg) -> Optional[dict]:
+    if cfg is None:
+        return None
+    return {"__config__": type(cfg).__name__,
+            "fields": {f.name: _encode_value(getattr(cfg, f.name))
+                       for f in dataclasses.fields(cfg)}}
+
+
+def _decode_config(d):
+    if d is None:
+        return None
+    from .. import api
+    cls = getattr(api, d["__config__"], None)
+    if cls is None or not (isinstance(cls, type)
+                           and issubclass(cls, api.SolverConfig)):
+        raise ValueError(
+            f"checkpoint names unknown config {d['__config__']!r}")
+    return cls(**{k: _decode_value(v) for k, v in d["fields"].items()})
+
+
+def save_fit_result(ckpt_dir: str, step: int, result) -> str:
+    """Checkpoint a ``repro.api.FitResult`` — factors, trace, epochs
+    done, timings, the exact config (step-size schedule, kernel policy,
+    ownership schedule) and a replayable ``extras['schedule']`` if one is
+    attached — atomically, in the standard ``step_<N>`` layout.  Array
+    payloads go to the npz shard, everything else to ``meta.json``.
+    Non-schedule ``extras`` (device logs, chained problems) are not
+    persisted."""
+    tree = {"W": np.asarray(result.W), "H": np.asarray(result.H),
+            "trace_epochs": np.asarray(result.trace_epochs),
+            "trace_rmse": np.asarray(result.trace_rmse)}
+    meta = {
+        "epochs_done": _encode_value(result.epochs_done),
+        "wall_time": float(result.wall_time),
+        "virtual_time": (None if result.virtual_time is None
+                         else float(result.virtual_time)),
+        "solver": result.solver,
+        "config": _encode_config(result.config),
+    }
+    sched = result.extras.get("schedule")
+    if sched is not None:
+        meta["extras_schedule"] = _encode_value(sched)
+    return save_checkpoint(ckpt_dir, step, tree,
+                           extra={"fit_result": meta})
+
+
+def restore_fit_result(ckpt_dir: str,
+                       step: Optional[int] = None) -> Tuple[Any,
+                                                            Optional[int]]:
+    """Inverse of :func:`save_fit_result`: returns ``(FitResult, step)``,
+    or ``(None, None)`` when no committed step exists.  The restored
+    result warm-starts ``solve``/``partial_fit`` bitwise-identically to
+    the run it was saved from (same factors, same ``epochs_done`` for the
+    step-size schedule, same config object graph)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "meta.json")) as f:
+        meta = json.load(f)["extra"]["fit_result"]
+    data = np.load(os.path.join(step_dir, "shard_0.npz"))
+    from ..api import FitResult
+    extras = {}
+    if meta.get("extras_schedule") is not None:
+        extras["schedule"] = _decode_value(meta["extras_schedule"])
+    return FitResult(
+        W=data["W"], H=data["H"],
+        trace_epochs=data["trace_epochs"],
+        trace_rmse=data["trace_rmse"],
+        epochs_done=meta["epochs_done"],
+        wall_time=meta["wall_time"],
+        virtual_time=meta["virtual_time"],
+        solver=meta["solver"],
+        config=_decode_config(meta["config"]),
+        extras=extras), step
 
 
 class AsyncCheckpointer:

@@ -11,12 +11,13 @@ from .nomad import NomadRingEngine, fit
 from .async_sim import NomadSimulator, SimConfig, SimResult, simulate_dsgd
 from . import objective  # the module; the J(W,H) function is objective.objective
 from .objective import init_factors, init_factors_np, rmse, rmse_np
+from .schedule import OwnershipSchedule
 from .stepsize import PowerSchedule, BoldDriver
 from . import baselines, partition, serial
 
 __all__ = [
     "NomadRingEngine", "fit", "NomadSimulator", "SimConfig", "SimResult",
     "simulate_dsgd", "init_factors", "init_factors_np", "objective", "rmse",
-    "rmse_np", "PowerSchedule", "BoldDriver", "baselines", "partition",
-    "serial",
+    "rmse_np", "OwnershipSchedule", "PowerSchedule", "BoldDriver",
+    "baselines", "partition", "serial",
 ]

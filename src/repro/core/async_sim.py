@@ -70,6 +70,11 @@ class SimResult:
     busy_time: np.ndarray                 # per worker
     trace: List[Tuple[float, int, float]]  # (time, n_updates, test RMSE)
     throughput: float                     # updates / worker / unit time
+    #: (start_time, worker, item) per completed segment — the observed
+    #: ownership transfers; ``OwnershipSchedule.from_sim_log`` compiles
+    #: these into a schedule the real engine replays (NOMAD mode only)
+    visit_log: List[Tuple[float, int, int]] = dataclasses.field(
+        default_factory=list)
 
 
 class NomadSimulator:
@@ -182,6 +187,7 @@ class NomadSimulator:
         next_fail = next(fail_iter, None)
 
         update_log: List[Tuple[float, int]] = []
+        visit_log: List[Tuple[float, int, int]] = []
         trace: List[Tuple[float, int, float]] = []
         n_updates = 0
         record_at = int(cfg.record_every * nnz)
@@ -248,6 +254,7 @@ class NomadSimulator:
                 if q not in self._pending or self._pending[q][0] != j:
                     continue  # stale event (e.g. re-routed at failure)
                 _, t_start, seg = self._pending.pop(q)
+                visit_log.append((t_start, q, j))
                 if seg is not None:
                     # owner-computes: sequential SGD on \bar\Omega_j^{(q)}
                     lam = cfg.lam
@@ -283,7 +290,8 @@ class NomadSimulator:
         thpt = n_updates / (total_time * max(1, int(alive.sum())))
         return SimResult(W=self.W, H=self.H, update_log=update_log,
                          n_updates=n_updates, sim_time=sim_time,
-                         busy_time=busy, trace=trace, throughput=thpt)
+                         busy_time=busy, trace=trace, throughput=thpt,
+                         visit_log=visit_log)
 
 
 # ---------------------------------------------------------------------- #
@@ -314,6 +322,10 @@ def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
     trace: List[Tuple[float, int, float]] = []
     update_log: List[Tuple[float, int]] = []
     target = int(cfg.epochs * nnz)
+    # trace granularity honors cfg.record_every (in epochs), mirroring
+    # NomadSimulator — recording after *every* sub-epoch was O(p * epochs)
+    # full test-RMSE evaluations and bloated traces at large p
+    record_at = int(cfg.record_every * nnz)
 
     while n_updates < target:
         for s in range(p):          # one sub-epoch = one diagonal of blocks
@@ -335,10 +347,16 @@ def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
             step_time = (max(durs.max(), comm) if overlap
                          else durs.max() + comm)
             t_sim += step_time   # barrier: everyone waits for the slowest
-            if test is not None:
+            if test is not None and n_updates >= record_at:
+                record_at += int(cfg.record_every * nnz)
                 trace.append((t_sim, n_updates, rmse_np(W, H, *test)))
             if n_updates >= target:
                 break
+
+    # a run shorter than one record interval must still report its final
+    # RMSE (consumers read trace[-1] / FitResult.rmse[-1])
+    if test is not None and (not trace or trace[-1][1] != n_updates):
+        trace.append((t_sim, n_updates, rmse_np(W, H, *test)))
 
     thpt = n_updates / (max(t_sim, 1e-12) * p)
     return SimResult(W=W, H=H, update_log=update_log, n_updates=n_updates,

@@ -1,19 +1,31 @@
-"""NOMAD SPMD ring engine — the deployable TPU implementation.
+"""NOMAD SPMD engine — the deployable TPU implementation.
 
-TPU adaptation of Algorithm 1 (see DESIGN.md §2): W shards are owner-fixed
-on the worker mesh axis, H blocks are *nomadic* and circulate around a ring
-via ``jax.lax.ppermute``.  One epoch = p ring steps; at step s worker q
-owns block (q - s) mod p; every rating is applied exactly once per epoch
-with a well-defined serial-equivalent ordering (``BlockedRatings.ring_order``).
+TPU adaptation of Algorithm 1 (see DESIGN.md §2/§8): W shards are
+owner-fixed on the worker mesh axis, H blocks are *nomadic* and hop
+between workers via ``jax.lax.ppermute``.  Which hops happen when is
+data, not code: the engine executes any
+``core.schedule.OwnershipSchedule`` — the canonical ring rotation
+(default; bitwise-preserves the historical behavior), compiled
+uniform-random routing (Alg. 1 line 22), queue-aware balanced routing
+(§3.3), or a schedule compiled from an async-simulator run
+(``OwnershipSchedule.from_sim_log``).  One epoch = ``schedule.n_steps``
+steps; at step s worker q holds block ``schedule.table[s, q]`` and
+applies its cell iff ``schedule.active[s, q]``; every rating is applied
+exactly once per epoch with a well-defined serial-equivalent ordering
+(``BlockedRatings.schedule_order``).
 
 Two executors share the same math:
 
 * ``run_epoch_spmd``   — shard_map over a real device axis; the ppermute is
   a genuine inter-chip collective.  This is what the multi-pod config runs.
-* ``run_epoch_local``  — single-device emulation: the ring step becomes an
-  outer ``lax.scan``, the per-worker block updates a ``vmap`` (cells within
-  a step touch disjoint rows/cols so this is exact), and the ppermute a
-  ``jnp.roll`` on the worker dimension.  Bitwise-identical results; used
+  The ring keeps its historical scan + constant-shift collective; general
+  schedules unroll the step loop so each step's permutation is a static
+  ``ppermute`` pattern.
+* ``run_epoch_local``  — single-device emulation: the schedule step becomes
+  an outer ``lax.scan``, the per-worker block updates a ``vmap`` (cells
+  within a step touch disjoint rows/cols so this is exact), and the
+  permute a per-step gather on the worker dimension (the ring instance is
+  exactly the old ``jnp.roll(Hs, 1)``).  Bitwise-identical results; used
   for tests and CPU runs.
 
 The per-block update is ``kernels.ops.block_sgd`` driven by a
@@ -53,6 +65,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import partition as part
+from .schedule import OwnershipSchedule
 from .stepsize import PowerSchedule
 from ..compat import shard_map as _shard_map
 from ..kernels import ops as kops
@@ -60,83 +73,131 @@ from ..kernels.policy import KernelPolicy
 
 
 @functools.partial(jax.jit, static_argnames=("policy",))
-def _local_epoch(Ws, Hs, rows, cols, vals, mask, lr, lam,
-                 policy: KernelPolicy = KernelPolicy(impl="xla")):
-    """Single-device ring-epoch emulation.
+def _local_epoch(Ws, Hs, rows, cols, vals, mask, perm_src, lr, lam,
+                 policy: KernelPolicy = KernelPolicy(impl="xla"),
+                 entry=None):
+    """Single-device schedule-epoch emulation.
 
     Ws: (p, m_local, k)   Hs: (p, n_local, k) where Hs[q] is the block
     *currently held* by worker q.  rows/cols/vals/mask are indexed
-    [worker, ring_step, ...]: flat (p, p, max_nnz) lists for the
-    sequential impls, (p, p, n_waves, wave_width) wave layouts for the
-    wave impls.
+    [worker, step, ...]: flat (p, n_steps, max_nnz) lists for the
+    sequential impls, (p, n_steps, n_waves, wave_width) wave layouts for
+    the wave impls.  ``perm_src`` is the schedule's (n_steps, p)
+    post-step gather (``OwnershipSchedule.perm_sources``; the ring rows
+    are all the ``+1`` shift, making the scan body exactly the old
+    ``jnp.roll``), ``entry`` the optional pre-epoch gather from the home
+    placement to ``table[0]`` (``None`` for the ring — idle slots of a
+    general schedule are empty cells, so they run as exact no-ops).
     """
-    p = Ws.shape[0]
+    if entry is not None:
+        Hs = jnp.take(Hs, entry, axis=0)
 
-    def ring_step(carry, step_data):
+    def sched_step(carry, step_data):
         Ws, Hs = carry
-        r, c, v, m = step_data  # each (p, max_nnz)
+        r, c, v, m, psrc = step_data  # data (p, ...), psrc (p,)
         Ws, Hs = jax.vmap(
             lambda W, H, rr, cc, vv, mm: kops.block_sgd(
                 W, H, rr, cc, vv, mm, lr, lam, policy=policy)
         )(Ws, Hs, r, c, v, m)
-        # ring permute: block held by q moves to q+1
-        Hs = jnp.roll(Hs, 1, axis=0)
+        # ownership transfer: worker q's next block comes from psrc[q]
+        Hs = jnp.take(Hs, psrc, axis=0)
         return (Ws, Hs), ()
 
-    # scan over ring steps: step s uses data[:, s]
+    # scan over schedule steps: step s uses data[:, s]
     (Ws, Hs), _ = jax.lax.scan(
-        ring_step, (Ws, Hs),
+        sched_step, (Ws, Hs),
         (jnp.swapaxes(rows, 0, 1), jnp.swapaxes(cols, 0, 1),
-         jnp.swapaxes(vals, 0, 1), jnp.swapaxes(mask, 0, 1)))
-    # after p steps every block is back home
+         jnp.swapaxes(vals, 0, 1), jnp.swapaxes(mask, 0, 1), perm_src))
+    # the last perm_src row routes every block back home
     return Ws, Hs
 
 
 def _spmd_epoch_fn(p: int, axis: str, lam: float, policy: KernelPolicy,
-                   sub_starts=None):
+                   sub_starts=None, sched: Optional[OwnershipSchedule] = None):
     """Per-shard epoch body for shard_map (one worker's view).
 
     With ``policy.sub_blocks > 1`` the rating arrays are the
     *pre-partitioned* per-sub-block lists from
     ``partition.pack(..., sub_blocks=...)`` (shape
-    ``(1, p, sub_blocks, sub_max_nnz)``, cols already localized to the
-    sub-block), so every sub-block touches only its own ratings — the
+    ``(1, n_steps, sub_blocks, sub_max_nnz)``, cols already localized to
+    the sub-block), so every sub-block touches only its own ratings — the
     seed's masked re-scan of the full ``max_nnz`` list per sub-block
     multiplied epoch compute by ``sub_blocks``.
+
+    The ring schedule keeps the historical ``lax.scan`` over steps with
+    one constant-shift collective (bitwise-preserving).  A general
+    ``OwnershipSchedule`` unrolls the (short) step loop so every step's
+    ownership transfer is its own static ``ppermute`` pattern — the
+    sub-block pipelining applies per step exactly as for the ring.
     """
-    perm = [(i, (i + 1) % p) for i in range(p)]
     sub_blocks = policy.sub_blocks
 
+    if sched is None or sched.is_ring:
+        perm = [(i, (i + 1) % p) for i in range(p)]
+
+        def epoch(W, Hblk, rows, cols, vals, mask, lr):
+            # W: (1, m_local, k) -> squeeze; data: (1, p, ...)
+            W = W[0]
+            Hblk = Hblk[0]
+
+            def ring_step(carry, step_data):
+                W, Hblk = carry
+                r, c, v, m = step_data
+                if sub_blocks == 1:
+                    W, Hblk = kops.block_sgd(W, Hblk, r, c, v, m, lr, lam,
+                                             policy=policy)
+                    Hblk = jax.lax.ppermute(Hblk, axis, perm)
+                else:
+                    # r/c/v/m: (sub_blocks, sub_max_nnz).  Permute each
+                    # sub-block as soon as its updates are done so XLA
+                    # can overlap the collective with the next
+                    # sub-block's compute.
+                    outs = []
+                    for s in range(sub_blocks):
+                        lo = int(sub_starts[s])
+                        hi = int(sub_starts[s + 1])
+                        Hsub = Hblk[lo:hi]
+                        W, Hsub = kops.block_sgd(
+                            W, Hsub, r[s], c[s], v[s], m[s], lr, lam,
+                            policy=policy)
+                        outs.append(jax.lax.ppermute(Hsub, axis, perm))
+                    Hblk = jnp.concatenate(outs, axis=0)
+                return (W, Hblk), ()
+
+            (W, Hblk), _ = jax.lax.scan(
+                ring_step, (W, Hblk), (rows[0], cols[0], vals[0], mask[0]))
+            return W[None], Hblk[None]
+
+        return epoch
+
+    pairs = sched.ppermute_pairs()
+    ent = sched.entry_sources()
+    entry_pairs = (None if ent is None
+                   else [(int(ent[q]), q) for q in range(p)])
+    n_steps = sched.n_steps
+
     def epoch(W, Hblk, rows, cols, vals, mask, lr):
-        # W: (1, m_local, k) -> squeeze; data: (1, p, ...)
         W = W[0]
         Hblk = Hblk[0]
-
-        def ring_step(carry, step_data):
-            W, Hblk = carry
-            r, c, v, m = step_data
+        if entry_pairs is not None:
+            Hblk = jax.lax.ppermute(Hblk, axis, entry_pairs)
+        for s in range(n_steps):
+            r, c, v, m = rows[0, s], cols[0, s], vals[0, s], mask[0, s]
             if sub_blocks == 1:
                 W, Hblk = kops.block_sgd(W, Hblk, r, c, v, m, lr, lam,
                                          policy=policy)
-                Hblk = jax.lax.ppermute(Hblk, axis, perm)
+                Hblk = jax.lax.ppermute(Hblk, axis, pairs[s])
             else:
-                # r/c/v/m: (sub_blocks, sub_max_nnz).  Permute each
-                # sub-block as soon as its updates are done so XLA can
-                # overlap the collective with the next sub-block's compute.
                 outs = []
-                for s in range(sub_blocks):
-                    lo = int(sub_starts[s])
-                    hi = int(sub_starts[s + 1])
+                for sb in range(sub_blocks):
+                    lo = int(sub_starts[sb])
+                    hi = int(sub_starts[sb + 1])
                     Hsub = Hblk[lo:hi]
                     W, Hsub = kops.block_sgd(
-                        W, Hsub, r[s], c[s], v[s], m[s], lr, lam,
+                        W, Hsub, r[sb], c[sb], v[sb], m[sb], lr, lam,
                         policy=policy)
-                    outs.append(jax.lax.ppermute(Hsub, axis, perm))
+                    outs.append(jax.lax.ppermute(Hsub, axis, pairs[s]))
                 Hblk = jnp.concatenate(outs, axis=0)
-            return (W, Hblk), ()
-
-        (W, Hblk), _ = jax.lax.scan(
-            ring_step, (W, Hblk), (rows[0], cols[0], vals[0], mask[0]))
         return W[None], Hblk[None]
 
     return epoch
@@ -160,11 +221,17 @@ def _sharded_rmse(Ws, Hs, ridx, cidx, vals):
 class NomadRingEngine:
     """Internal executor behind ``repro.api.solve``: owns the packed
     blocks and the factor shards.  (Direct construction still works and
-    is what the distributed tests do.)"""
+    is what the distributed tests do.)
+
+    Executes the ``OwnershipSchedule`` its packing was laid out for
+    (``br.schedule``; the ring by default — the class name predates the
+    schedule IR).  ``stepsize`` is the per-epoch SGD step-size schedule,
+    eq. (11).
+    """
     br: part.BlockedRatings
     k: int
     lam: float
-    schedule: PowerSchedule
+    stepsize: PowerSchedule
     impl: str = "xla"         # legacy: 'xla'|'pallas'|'auto'|'wave'|'wave_pallas'
     sub_blocks: int = 1
     mesh: Optional[Mesh] = None    # if given, run shard_map on axis 'workers'
@@ -184,13 +251,17 @@ class NomadRingEngine:
         """(Re)load the packed rating arrays onto the device(s); shared by
         construction and :meth:`grow`."""
         self.br = br
+        self.sched = br.schedule or OwnershipSchedule.ring(br.p)
+        self._perm_src = jnp.asarray(self.sched.perm_sources())
+        ent = self.sched.entry_sources()
+        self._entry = None if ent is None else jnp.asarray(ent)
         src = self.policy.cell_arrays(br, pipelined=self.mesh is not None)
         self.rows, self.cols, self.vals, self.mask = map(jnp.asarray, src)
         self._eval_cache = None
         if self.mesh is not None:
             axis = self.mesh.axis_names[0]
             fn = _spmd_epoch_fn(br.p, axis, self.lam, self.policy,
-                                br.sub_starts)
+                                br.sub_starts, self.sched)
             pspec = P(axis)
             self._spmd_epoch = jax.jit(_shard_map(
                 fn, mesh=self.mesh,
@@ -263,12 +334,13 @@ class NomadRingEngine:
             self.Hs = jax.device_put(self.Hs, sh)
 
     def run_epoch(self):
-        lr = jnp.asarray(self.schedule(self.epoch_idx), dtype=self.Ws.dtype)
+        lr = jnp.asarray(self.stepsize(self.epoch_idx), dtype=self.Ws.dtype)
         lam = self.lam
         if self.mesh is None:
             self.Ws, self.Hs = _local_epoch(
                 self.Ws, self.Hs, self.rows, self.cols, self.vals,
-                self.mask, lr, lam, policy=self.policy)
+                self.mask, self._perm_src, lr, lam, policy=self.policy,
+                entry=self._entry)
         else:
             self.Ws, self.Hs = self._spmd_epoch(
                 self.Ws, self.Hs, self.rows, self.cols, self.vals,
@@ -304,9 +376,11 @@ class NomadRingEngine:
     def eval_rmse(self, test) -> float:
         """Test RMSE without leaving the device (no factors() round-trip).
 
-        At epoch boundaries every nomadic H block is back home (p ring
-        permutes = identity), so shard q holds exactly block q and the
-        flat-index gather reads the same values as the unsharded matrix.
+        At epoch boundaries every nomadic H block is back home (every
+        schedule's final transition routes block b to worker b —
+        ``OwnershipSchedule.perm_sources``), so shard q holds exactly
+        block q and the flat-index gather reads the same values as the
+        unsharded matrix.
         """
         ridx, cidx, vals = self._eval_args(test)
         return float(_sharded_rmse(self.Ws, self.Hs, ridx, cidx, vals))
@@ -347,7 +421,7 @@ def fit(rows, cols, vals, m, n, k, p, *, lam=0.05,
     problem = MCProblem(rows=rows, cols=cols, vals=vals, m=m, n=n,
                         test=test)
     config = NomadConfig(k=k, lam=lam, epochs=epochs, seed=seed,
-                         schedule=schedule, p=p, kernel=impl,
+                         stepsize=schedule, p=p, kernel=impl,
                          balanced=balanced, sub_blocks=sub_blocks)
     res = solve(problem, config, mesh=mesh, verbose=verbose)
     return res.W, res.H, res.trace

@@ -2,13 +2,21 @@
 
 The paper splits users into ``p`` disjoint sets (footnote 1 recommends
 balancing by number of ratings, which we implement) and treats item columns
-as nomadic.  For the SPMD ring engine we pre-pack the ratings into a
-``p x p`` grid of cells — cell ``(q, b)`` holds the ratings with row-owner
-``q`` and item-block ``b`` — padded to a common ``max_nnz`` so a
-``lax.scan`` over ring steps can index them.  Fine-grained nnz-balanced
-construction of the *item blocks* is the static SPMD equivalent of the
-paper's dynamic queue-length load balancing (§3.3): every (worker, block)
-cell carries approximately equal work.
+as nomadic.  For the SPMD engine we pre-pack the ratings into a ``p x p``
+grid of cells — cell ``(q, b)`` holds the ratings with row-owner ``q`` and
+item-block ``b`` — padded to a common ``max_nnz`` so a ``lax.scan`` over
+schedule steps can index them.  Fine-grained nnz-balanced construction of
+the *item blocks* is the static SPMD equivalent of the paper's dynamic
+queue-length load balancing (§3.3): every (worker, block) cell carries
+approximately equal work.
+
+Cells are laid out in *execution order* ``[worker, step]`` for an
+:class:`~repro.core.schedule.OwnershipSchedule` (DESIGN.md §8): slot
+``(q, s)`` holds the cell the schedule activates on worker ``q`` at step
+``s`` — for the default ring schedule that is cell ``(q, (q - s) mod p)``,
+reproducing the historical ``[worker, ring_step]`` layout bit for bit;
+for a general schedule idle slots are empty (all-False mask) and the
+step dimension is ``schedule.n_steps >= p``.
 
 Within a cell, ratings are stored in *wave-major* order (see DESIGN.md §3):
 a greedy coloring groups the cell's ratings into waves — maximal batches in
@@ -27,9 +35,11 @@ the SPMD engine's pipelined permutes touch each rating exactly once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
+
+from .schedule import OwnershipSchedule, greedy_two_resource_color
 
 
 def balanced_assign(weights: np.ndarray, p: int) -> np.ndarray:
@@ -140,21 +150,15 @@ def greedy_wave_color(rloc: np.ndarray, cloc: np.ndarray) -> np.ndarray:
     but minutes of one-time pack cost at full Netflix scale.  For short
     runs on huge data either pack with ``waves=False`` (sequential
     impls) or amortize the pack across many epochs / a saved packing.
+
+    The recurrence itself is ``schedule.greedy_two_resource_color`` —
+    the same coloring the schedule IR applies one level up, to cell
+    visits (workers x blocks).
     """
-    n = len(rloc)
-    wave = np.empty(n, dtype=np.int64)
-    if n == 0:
-        return wave
-    next_r = np.zeros(int(rloc.max()) + 1, dtype=np.int64)
-    next_c = np.zeros(int(cloc.max()) + 1, dtype=np.int64)
-    for t in range(n):
-        i = rloc[t]
-        j = cloc[t]
-        w = next_r[i] if next_r[i] > next_c[j] else next_c[j]
-        wave[t] = w
-        next_r[i] = w + 1
-        next_c[j] = w + 1
-    return wave
+    if len(rloc) == 0:
+        return np.empty(0, dtype=np.int64)
+    return greedy_two_resource_color(rloc, cloc, int(rloc.max()) + 1,
+                                     int(cloc.max()) + 1)
 
 
 def pack_cell_waves(
@@ -214,13 +218,16 @@ def pack_cell_waves(
 
 @dataclasses.dataclass
 class BlockedRatings:
-    """Ratings packed for the ring engine.  All arrays are numpy.
+    """Ratings packed for the SPMD engine.  All arrays are numpy.
 
-    Ring convention: H block ``b`` starts on worker ``b`` and moves to
-    worker ``b+1 (mod p)`` after every ring step, so at step ``s`` worker
-    ``q`` owns block ``(q - s) mod p``.  ``rows/cols/vals/mask[q, s]`` hold
-    cell ``(q, (q - s) mod p)``, i.e. they are already laid out in
-    ring-step order.
+    Cells are laid out in execution order for :attr:`schedule`:
+    ``rows/cols/vals/mask[q, s]`` hold the cell worker ``q`` executes at
+    step ``s`` — cell ``(q, schedule.table[s, q])`` when
+    ``schedule.active[s, q]``, an empty slot otherwise.  The step
+    dimension is ``schedule.n_steps``.  For the default ring schedule
+    (block ``b`` starts on worker ``b``, moves to ``b+1 (mod p)`` every
+    step) this is exactly the historical ``[worker, ring_step]`` layout:
+    cell ``(q, (q - s) mod p)`` at slot ``(q, s)``, ``n_steps == p``.
     """
     p: int
     m: int
@@ -234,30 +241,49 @@ class BlockedRatings:
     col_local: np.ndarray     # (n,) -> local col index
     row_of: np.ndarray        # (p, m_local) -> global row (or -1 pad)
     col_of: np.ndarray        # (p, n_local) -> global col (or -1 pad)
-    rows: np.ndarray          # (p, p, max_nnz) int32, local row idx
-    cols: np.ndarray          # (p, p, max_nnz) int32, local col idx
-    vals: np.ndarray          # (p, p, max_nnz) float32
-    mask: np.ndarray          # (p, p, max_nnz) bool
-    nnz_cell: np.ndarray      # (p, p) ints, [q, s] = real nnz of cell
+    rows: np.ndarray          # (p, n_steps, max_nnz) int32, local row idx
+    cols: np.ndarray          # (p, n_steps, max_nnz) int32, local col idx
+    vals: np.ndarray          # (p, n_steps, max_nnz) float32
+    mask: np.ndarray          # (p, n_steps, max_nnz) bool
+    nnz_cell: np.ndarray      # (p, n_steps) ints, [q, s] = real nnz of cell
+
+    @property
+    def n_steps(self) -> int:
+        return self.rows.shape[1]
 
     def block_at(self, q: int, step: int) -> int:
-        return (q - step) % self.p
+        """Item block held by worker ``q`` at ``step`` (parked or
+        active)."""
+        if self.schedule is None:
+            return (q - step) % self.p
+        return self.schedule.block_at(q, step)
 
-    def ring_order(self) -> np.ndarray:
-        """Serial-equivalent update ordering of one epoch.
+    def schedule_order(self) -> np.ndarray:
+        """Serial-equivalent update ordering of one epoch — the schedule
+        IR's serial witness.
 
         Returns an int64 array of *global rating ids* (indices into the
-        original COO arrays used at pack time) in an order that is an exact
-        linearization of the ring execution: for each ring step, the per-cell
-        sequences of all workers are concatenated (any interleaving is
-        equivalent — cells within a step touch disjoint rows and columns).
+        original COO arrays used at pack time) in an order that is an
+        exact linearization of the scheduled execution: for each step,
+        the per-cell sequences of all active workers are concatenated
+        (any interleaving is equivalent — a step's cells touch
+        pairwise-disjoint row shards and item blocks, the generalized
+        diagonal invariant).
         """
         return np.concatenate(
             [self.gid[q, s, : self.nnz_cell[q, s]]
-             for s in range(self.p) for q in range(self.p)]
+             for s in range(self.n_steps) for q in range(self.p)]
         )
 
-    # filled by pack(); (p, p, max_nnz) global rating ids, -1 pad
+    def ring_order(self) -> np.ndarray:
+        """Alias of :meth:`schedule_order` (the name predates the
+        schedule IR; for a ring packing they are the same object)."""
+        return self.schedule_order()
+
+    # the OwnershipSchedule the cells are laid out for (set by pack())
+    schedule: Optional[OwnershipSchedule] = None
+
+    # filled by pack(); (p, n_steps, max_nnz) global rating ids, -1 pad
     gid: np.ndarray = None
 
     # --- wave layout (DESIGN.md §3); filled by pack(..., waves=True) ---
@@ -267,12 +293,12 @@ class BlockedRatings:
     # waves in order is the SAME serial linearization as rows/cols/....
     n_waves: int = 0          # padded wave count per cell
     wave_width: int = 0       # padded ratings per wave
-    wave_rows: np.ndarray = None   # (p, p, n_waves, wave_width) int32
-    wave_cols: np.ndarray = None   # (p, p, n_waves, wave_width) int32
-    wave_vals: np.ndarray = None   # (p, p, n_waves, wave_width) float32
-    wave_mask: np.ndarray = None   # (p, p, n_waves, wave_width) bool
-    wave_gid: np.ndarray = None    # (p, p, n_waves, wave_width) int64, -1 pad
-    wave_cnt: np.ndarray = None    # (p, p, n_waves) real wave sizes
+    wave_rows: np.ndarray = None   # (p, n_steps, n_waves, wave_width) int32
+    wave_cols: np.ndarray = None   # (p, n_steps, n_waves, wave_width) int32
+    wave_vals: np.ndarray = None   # (p, n_steps, n_waves, wave_width) f32
+    wave_mask: np.ndarray = None   # (p, n_steps, n_waves, wave_width) bool
+    wave_gid: np.ndarray = None    # (p, n_steps, n_waves, wave_width) int64
+    wave_cnt: np.ndarray = None    # (p, n_steps, n_waves) real wave sizes
 
     # --- sub-block pre-partition (SPMD pipelining); sub_blocks > 1 only ---
     # Cell ratings split by item sub-block with cols already localized to
@@ -280,11 +306,11 @@ class BlockedRatings:
     # full-list re-scan per sub-block (which multiplied epoch cost).
     sub_blocks: int = 1
     sub_starts: np.ndarray = None  # (sub_blocks + 1,) col boundaries
-    sub_rows: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) int32
-    sub_cols: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) int32
-    sub_vals: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) float32
-    sub_mask: np.ndarray = None    # (p, p, sub_blocks, sub_max_nnz) bool
-    sub_nnz: np.ndarray = None     # (p, p, sub_blocks) real counts
+    sub_rows: np.ndarray = None    # (p, n_steps, sub_blocks, sub_max) int32
+    sub_cols: np.ndarray = None    # (p, n_steps, sub_blocks, sub_max) int32
+    sub_vals: np.ndarray = None    # (p, n_steps, sub_blocks, sub_max) f32
+    sub_mask: np.ndarray = None    # (p, n_steps, sub_blocks, sub_max) bool
+    sub_nnz: np.ndarray = None     # (p, n_steps, sub_blocks) real counts
 
 
 def _localize(row_owner: np.ndarray, col_block: np.ndarray, m: int, n: int,
@@ -341,20 +367,30 @@ def _order_cell(ids, rloc, cloc, *, waves: bool, sub_blocks: int, sb: int):
     return ids, rloc, cloc, wave, sid
 
 
+def _empty_cell(waves: bool):
+    """The (ids, rloc, cloc, wave, sid) entry of an idle ``[worker, step]``
+    slot (a general schedule's parked steps)."""
+    e = np.empty(0, dtype=np.int64)
+    return e, e, e, (e if waves else None), e
+
+
 def _fill_layouts(cell_info, vals_f, *, p, m, n, m_local, n_local,
                   row_owner, row_local, col_block, col_local, row_of,
                   col_of, waves, wave_width, sub_blocks,
-                  sub_starts) -> BlockedRatings:
+                  sub_starts, schedule) -> BlockedRatings:
     """Compute padded dims from ordered cell sequences and fill every
     layout.  ``cell_info[q][s] = (ids, rloc, cloc, wave, sid)`` in final
     serial order (from :func:`_order_cell` or copied verbatim from an old
-    packing by :func:`repack_delta`)."""
+    packing by :func:`repack_delta`), with ``s`` ranging over
+    ``schedule.n_steps`` execution steps (idle slots hold empty
+    entries)."""
+    n_steps = schedule.n_steps
     max_nnz = 1
     n_waves = 1
     max_wave_sz = 1
     sub_max = 1
     for q in range(p):
-        for s in range(p):
+        for s in range(n_steps):
             ids, rloc, cloc, wave, sid = cell_info[q][s]
             if len(ids) == 0:
                 continue
@@ -372,29 +408,29 @@ def _fill_layouts(cell_info, vals_f, *, p, m, n, m_local, n_local,
         raise ValueError(
             f"wave_width={wave_width} < largest wave ({max_wave_sz})")
 
-    R = np.zeros((p, p, max_nnz), dtype=np.int32)
-    C = np.zeros((p, p, max_nnz), dtype=np.int32)
-    V = np.zeros((p, p, max_nnz), dtype=np.float32)
-    M = np.zeros((p, p, max_nnz), dtype=bool)
-    G = np.full((p, p, max_nnz), -1, dtype=np.int64)
-    nnz_cell = np.zeros((p, p), dtype=np.int64)
+    R = np.zeros((p, n_steps, max_nnz), dtype=np.int32)
+    C = np.zeros((p, n_steps, max_nnz), dtype=np.int32)
+    V = np.zeros((p, n_steps, max_nnz), dtype=np.float32)
+    M = np.zeros((p, n_steps, max_nnz), dtype=bool)
+    G = np.full((p, n_steps, max_nnz), -1, dtype=np.int64)
+    nnz_cell = np.zeros((p, n_steps), dtype=np.int64)
 
     if waves:
-        WR = np.zeros((p, p, n_waves, wave_width), dtype=np.int32)
-        WC = np.zeros((p, p, n_waves, wave_width), dtype=np.int32)
-        WV = np.zeros((p, p, n_waves, wave_width), dtype=np.float32)
-        WM = np.zeros((p, p, n_waves, wave_width), dtype=bool)
-        WG = np.full((p, p, n_waves, wave_width), -1, dtype=np.int64)
-        Wcnt = np.zeros((p, p, n_waves), dtype=np.int64)
+        WR = np.zeros((p, n_steps, n_waves, wave_width), dtype=np.int32)
+        WC = np.zeros((p, n_steps, n_waves, wave_width), dtype=np.int32)
+        WV = np.zeros((p, n_steps, n_waves, wave_width), dtype=np.float32)
+        WM = np.zeros((p, n_steps, n_waves, wave_width), dtype=bool)
+        WG = np.full((p, n_steps, n_waves, wave_width), -1, dtype=np.int64)
+        Wcnt = np.zeros((p, n_steps, n_waves), dtype=np.int64)
     if sub_blocks > 1:
-        SR = np.zeros((p, p, sub_blocks, sub_max), dtype=np.int32)
-        SC = np.zeros((p, p, sub_blocks, sub_max), dtype=np.int32)
-        SV = np.zeros((p, p, sub_blocks, sub_max), dtype=np.float32)
-        SM = np.zeros((p, p, sub_blocks, sub_max), dtype=bool)
-        Snnz = np.zeros((p, p, sub_blocks), dtype=np.int64)
+        SR = np.zeros((p, n_steps, sub_blocks, sub_max), dtype=np.int32)
+        SC = np.zeros((p, n_steps, sub_blocks, sub_max), dtype=np.int32)
+        SV = np.zeros((p, n_steps, sub_blocks, sub_max), dtype=np.float32)
+        SM = np.zeros((p, n_steps, sub_blocks, sub_max), dtype=bool)
+        Snnz = np.zeros((p, n_steps, sub_blocks), dtype=np.int64)
 
     for q in range(p):
-        for s in range(p):
+        for s in range(n_steps):
             ids, rloc, cloc, wave, sid = cell_info[q][s]
             cnt = len(ids)
             R[q, s, :cnt] = rloc
@@ -432,6 +468,7 @@ def _fill_layouts(cell_info, vals_f, *, p, m, n, m_local, n_local,
         col_block=col_block, col_local=col_local,
         row_of=row_of, col_of=col_of,
         rows=R, cols=C, vals=V, mask=M, nnz_cell=nnz_cell,
+        schedule=schedule,
     )
     br.gid = G
     if waves:
@@ -461,8 +498,10 @@ def pack(
     sub_blocks: int = 1,
     row_owner: Optional[np.ndarray] = None,
     col_block: Optional[np.ndarray] = None,
+    schedule: Union[str, OwnershipSchedule, None] = None,
+    schedule_seed: int = 0,
 ) -> BlockedRatings:
-    """Pack COO ratings into the ring-ordered block structure.
+    """Pack COO ratings into the schedule-ordered block structure.
 
     ``waves=True`` additionally emits the conflict-free wave layout (and
     stores the sequential arrays wave-major so both executions share one
@@ -476,6 +515,15 @@ def pack(
     uses this to pin the extended problem to the *sticky* assignment an
     incremental :func:`repack_delta` keeps, which is what makes the
     incremental and from-scratch packings comparable bit for bit.
+
+    ``schedule`` selects the ownership-transfer order the cells are laid
+    out for: ``None``/``"ring"`` (the canonical rotation — byte-identical
+    to the historical packing), ``"random"`` (Alg. 1 line 22 routing
+    compiled to conflict-free steps), ``"balanced"`` (§3.3 queue-aware
+    routing, fed the per-cell nnz as load weights), or an explicit
+    :class:`~repro.core.schedule.OwnershipSchedule` (e.g. one compiled
+    from a simulator run by ``OwnershipSchedule.from_sim_log``).
+    ``schedule_seed`` seeds the random/balanced constructors.
     """
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
@@ -513,15 +561,20 @@ def pack(
     order = np.lexsort((rows, cols, cell_id))
     counts = np.bincount(cell_id[order], minlength=p * p).reshape(p, p)
 
+    # resolve the schedule spec now that per-cell loads are known (the
+    # balanced constructor spreads by nnz_cell)
+    sched = OwnershipSchedule.resolve(schedule, p, seed=schedule_seed,
+                                      loads=counts)
+
     # ---- pass 1: per cell, order ratings (sub-block-major, wave-major) --
     # cell_info[q][s] = (ids, rloc, cloc, wave, sid) in final serial order
     starts = np.concatenate([[0], np.cumsum(counts.reshape(-1))])
-    cell_info = [[None] * p for _ in range(p)]
+    cell_info = [[_empty_cell(waves)] * sched.n_steps for _ in range(p)]
     for q in range(p):
         for b in range(p):
             lo, hi = starts[q * p + b], starts[q * p + b + 1]
             ids = order[lo:hi]
-            s = (q - b) % p  # ring step at which worker q owns block b
+            s = int(sched.step_of[q, b])  # step at which q executes b
             cell_info[q][s] = _order_cell(
                 ids, row_local[rows[ids]], col_local[cols[ids]],
                 waves=waves, sub_blocks=sub_blocks, sb=sb)
@@ -532,7 +585,7 @@ def pack(
         n_local=n_local, row_owner=row_owner, row_local=row_local,
         col_block=col_block, col_local=col_local, row_of=row_of,
         col_of=col_of, waves=waves, wave_width=wave_width,
-        sub_blocks=sub_blocks, sub_starts=sub_starts)
+        sub_blocks=sub_blocks, sub_starts=sub_starts, schedule=sched)
 
 
 def repack_delta(
@@ -562,12 +615,13 @@ def repack_delta(
     cannot move because new global ids sort after all existing ones).
 
     The result is bitwise-identical — same serial linearization
-    (``ring_order``) *and* same padded layouts — to a from-scratch
+    (``schedule_order``) *and* same padded layouts — to a from-scratch
     ``pack(ext_rows, ext_cols, ext_vals, m, n, p,
-    row_owner=out.row_owner, col_block=out.col_block)``: both paths order
-    affected cells with :func:`_order_cell` on identical inputs and fill
-    through :func:`_fill_layouts`.  Property-tested in
-    ``tests/test_streaming.py``.
+    row_owner=out.row_owner, col_block=out.col_block,
+    schedule=br.schedule)``: both paths order affected cells with
+    :func:`_order_cell` on identical inputs, lay them out at the same
+    (sticky) schedule steps, and fill through :func:`_fill_layouts`.
+    Property-tested in ``tests/test_streaming.py``.
     """
     if br.sub_blocks != 1:
         raise NotImplementedError(
@@ -618,10 +672,13 @@ def repack_delta(
         if len(seg):
             by_cell[int(new_cell[seg[0]])] = new_gid[seg]
 
-    cell_info = [[None] * p for _ in range(p)]
+    # the schedule is sticky too: the extended packing executes the same
+    # ownership-transfer order as the base (it only depends on p)
+    sched = br.schedule or OwnershipSchedule.ring(p)
+    cell_info = [[_empty_cell(waves)] * sched.n_steps for _ in range(p)]
     for q in range(p):
         for b in range(p):
-            s = (q - b) % p
+            s = int(sched.step_of[q, b])
             cnt = int(br.nnz_cell[q, s])
             old_ids = br.gid[q, s, :cnt]
             fresh = by_cell.get(q * p + b)
@@ -651,7 +708,7 @@ def repack_delta(
         n_local=n_local, row_owner=row_owner, row_local=row_local,
         col_block=col_block, col_local=col_local, row_of=row_of,
         col_of=col_of, waves=waves, wave_width=wave_width, sub_blocks=1,
-        sub_starts=sub_starts)
+        sub_starts=sub_starts, schedule=sched)
 
 
 def shard_factors(W: np.ndarray, H: np.ndarray, br: BlockedRatings

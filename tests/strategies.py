@@ -40,6 +40,19 @@ def random_cell(rng, m_t, n_t, k, nnz):
     return W, H, rows, cols, vals
 
 
+def drawn_schedule(seed, p):
+    """A valid OwnershipSchedule compiled from a random visit order: all
+    p**2 cells in a uniformly-shuffled sequence — much more adversarial
+    than the named constructors (arbitrary interleaving, arbitrary
+    parking), while the compiler guarantees validity by construction."""
+    from repro.core.schedule import OwnershipSchedule
+    rng = np.random.default_rng((seed, 0x5CED))
+    cells = [(q, b) for q in range(p) for b in range(p)]
+    order = rng.permutation(len(cells))
+    return OwnershipSchedule.from_visits(
+        p, [cells[i] for i in order], name=f"drawn_{seed}")
+
+
 def arrival_script(seed, m0, n0, nnz0, batches, *, max_new_ratings=120,
                    max_m_growth=6, max_n_growth=4):
     """A deterministic streaming scenario: the base problem plus a list
@@ -93,3 +106,10 @@ ARRIVALS = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
 #: simulator topology (worker count, routing, stragglers)
 SIM_TOPOLOGY = dict(p=st.integers(2, 6), seed=st.integers(0, 10_000),
                     load_balance=st.booleans(), straggle=st.booleans())
+
+#: ownership-schedule specs for the schedule-IR properties: a named
+#: constructor or a hypothesis-drawn random visit order (via
+#: :func:`drawn_schedule`)
+SCHEDULES = dict(seed=st.integers(0, 10_000), p=st.integers(1, 6),
+                 spec=st.sampled_from(["ring", "random", "balanced",
+                                       "drawn"]))

@@ -35,7 +35,7 @@ def test_fit_shim_bitwise_equals_solve(problem, tiny_mc_problem, impl):
                                 pr["k"], p=4, lam=0.01, schedule=sched,
                                 epochs=4, test=pr["test"], impl=impl)
     res = api.solve(problem, api.NomadConfig(
-        k=pr["k"], lam=0.01, epochs=4, seed=0, schedule=sched, p=4,
+        k=pr["k"], lam=0.01, epochs=4, seed=0, stepsize=sched, p=4,
         kernel=impl))
     assert np.array_equal(W1, res.W)
     assert np.array_equal(H1, res.H)
@@ -51,11 +51,11 @@ def test_on_device_eval_matches_legacy_host_eval(problem, impl):
     import jax.numpy as jnp
     res = api.solve(problem, api.NomadConfig(
         k=8, lam=0.01, epochs=3, seed=0, p=4, kernel=impl,
-        schedule=PowerSchedule(alpha=0.05, beta=0.02)))
+        stepsize=PowerSchedule(alpha=0.05, beta=0.02)))
     # replay the legacy host-side eval on the same factor stream
     br = problem.packed(4, waves=(impl == "wave"))
     eng = nomad.NomadRingEngine(br=br, k=8, lam=0.01, impl=impl,
-                                schedule=PowerSchedule(alpha=0.05,
+                                stepsize=PowerSchedule(alpha=0.05,
                                                        beta=0.02))
     W0, H0 = objective.init_factors(jax.random.key(0), problem.m,
                                     problem.n, 8)
@@ -99,7 +99,7 @@ def test_registry_covers_all_solvers():
 def test_registry_round_trip(problem, name):
     cfg_cls = api.config_for(name)
     cfg = cfg_cls(k=8, lam=0.01, epochs=2, seed=0,
-                  schedule=PowerSchedule(alpha=0.05, beta=0.02))
+                  stepsize=PowerSchedule(alpha=0.05, beta=0.02))
     res = api.solve(problem, cfg)
     assert res.solver == name
     assert res.config is cfg
@@ -186,7 +186,7 @@ def test_missing_wave_layout_raises_at_engine_construction(problem):
     br = problem.packed(2, waves=False)
     with pytest.raises(ValueError, match="wave layout"):
         nomad.NomadRingEngine(br=br, k=4, lam=0.01,
-                              schedule=PowerSchedule(), impl="wave")
+                              stepsize=PowerSchedule(), impl="wave")
 
 
 def test_problem_is_immutable(problem):
@@ -216,7 +216,7 @@ def test_warm_start_is_bitwise_resume(problem, name):
     bitwise too)."""
     cfg_cls = api.config_for(name)
     mk = lambda e: cfg_cls(k=8, lam=0.01, epochs=e, seed=0,
-                           schedule=PowerSchedule(alpha=0.05, beta=0.02))
+                           stepsize=PowerSchedule(alpha=0.05, beta=0.02))
     full = api.solve(problem, mk(6))
     half = api.solve(problem, mk(3))
     resumed = api.solve(problem, mk(3), warm_start=half)
@@ -233,7 +233,7 @@ def test_warm_start_trace_epochs_continue(problem, name):
     monotone (what examples/train_mc.py prints)."""
     cfg_cls = api.config_for(name)
     cfg = cfg_cls(k=8, lam=0.01, epochs=2, seed=0,
-                  schedule=PowerSchedule(alpha=0.05, beta=0.02))
+                  stepsize=PowerSchedule(alpha=0.05, beta=0.02))
     half = api.solve(problem, cfg)
     resumed = api.solve(problem, cfg, warm_start=half)
     joint = np.concatenate([half.trace_epochs, resumed.trace_epochs])

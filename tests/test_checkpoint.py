@@ -1,4 +1,5 @@
 """Checkpoint: roundtrip, atomicity, GC, async, resume."""
+import dataclasses
 import os
 import time
 
@@ -8,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
-                              restore_checkpoint, save_checkpoint)
+                              restore_checkpoint, restore_fit_result,
+                              save_checkpoint, save_fit_result)
 
 
 def _tree(seed=0):
@@ -60,6 +62,63 @@ def test_async_checkpointer_and_gc(tmp_path):
     assert steps == [30, 40]
     restored, step = restore_checkpoint(str(tmp_path), _tree())
     assert step == 40
+
+
+def test_fit_result_roundtrip_and_bitwise_resume(tmp_path, tiny_mc_problem):
+    """restore_fit_result + solve(warm_start=...) must equal the
+    uninterrupted run bitwise, with the full config — step-size
+    schedule, kernel policy, *and* ownership schedule — surviving the
+    round-trip."""
+    from repro import api
+    from repro.core.stepsize import PowerSchedule
+
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                            n=pr["n"], test=pr["test"])
+    cfg = api.NomadConfig(k=pr["k"], p=4, epochs=4, kernel="wave",
+                          schedule="random", schedule_seed=5,
+                          stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+    full = api.solve(problem, cfg)
+
+    half_cfg = dataclasses.replace(cfg, epochs=2)
+    half = api.solve(problem, half_cfg)
+    save_fit_result(str(tmp_path), 2, half)
+    restored, step = restore_fit_result(str(tmp_path))
+    assert step == 2
+    assert restored.config == half_cfg
+    assert restored.epochs_done == half.epochs_done
+    np.testing.assert_array_equal(restored.W, half.W)
+    np.testing.assert_array_equal(restored.trace_rmse, half.trace_rmse)
+    resumed = api.solve(problem, dataclasses.replace(restored.config,
+                                                     epochs=2),
+                        warm_start=restored)
+    np.testing.assert_array_equal(resumed.W, full.W)
+    np.testing.assert_array_equal(resumed.H, full.H)
+
+
+def test_fit_result_roundtrip_emitted_schedule(tmp_path, tiny_mc_problem):
+    """A simulator run's replayable extras['schedule'] survives the
+    checkpoint (so a restart can still replay the predicted routing)."""
+    from repro import api
+
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                            n=pr["n"])
+    sim = api.solve(problem, api.AsyncSimConfig(k=4, p=3, epochs=0.5,
+                                                emit_schedule=True))
+    save_fit_result(str(tmp_path), 0, sim)
+    restored, _ = restore_fit_result(str(tmp_path))
+    assert restored.extras["schedule"] == sim.extras["schedule"]
+    assert restored.virtual_time == sim.virtual_time
+    assert restored.solver == "async_sim"
+    assert restored.config == sim.config
+
+
+def test_restore_fit_result_empty(tmp_path):
+    restored, step = restore_fit_result(str(tmp_path / "nope"))
+    assert restored is None and step is None
 
 
 def test_train_resume_is_exact(tmp_path):

@@ -71,13 +71,13 @@ def test_spmd_nomad_engine_matches_local():
         W0 = W0.astype(np.float32); H0 = H0.astype(np.float32)
         sched = PowerSchedule(alpha=0.03, beta=0.0)
 
-        local = nomad.NomadRingEngine(br=br, k=k, lam=0.01, schedule=sched)
+        local = nomad.NomadRingEngine(br=br, k=k, lam=0.01, stepsize=sched)
         local.init_factors(W0, H0)
         local.run_epoch(); local.run_epoch()
         Wl, Hl = local.factors()
 
         mesh = make_mc_mesh(p)
-        spmd = nomad.NomadRingEngine(br=br, k=k, lam=0.01, schedule=sched,
+        spmd = nomad.NomadRingEngine(br=br, k=k, lam=0.01, stepsize=sched,
                                      mesh=mesh)
         spmd.init_factors(W0, H0)
         spmd.run_epoch(); spmd.run_epoch()
@@ -106,7 +106,7 @@ def test_spmd_sub_block_pipeline_matches_local():
 
         local = nomad.NomadRingEngine(
             br=partition.pack(rows, cols, vals, m, n, p),
-            k=k, lam=0.01, schedule=sched)
+            k=k, lam=0.01, stepsize=sched)
         local.init_factors(W0, H0)
         local.run_epoch()
         Wl, Hl = local.factors()
@@ -115,7 +115,7 @@ def test_spmd_sub_block_pipeline_matches_local():
         for sub in (2, 3):
             br = partition.pack(rows, cols, vals, m, n, p, sub_blocks=sub)
             spmd = nomad.NomadRingEngine(br=br, k=k, lam=0.01,
-                                         schedule=sched, sub_blocks=sub,
+                                         stepsize=sched, sub_blocks=sub,
                                          mesh=mesh)
             spmd.init_factors(W0, H0)
             spmd.run_epoch()
@@ -125,6 +125,47 @@ def test_spmd_sub_block_pipeline_matches_local():
             np.testing.assert_allclose(Ws, Wl, rtol=2e-4, atol=2e-5)
             np.testing.assert_allclose(Hs, Hl, rtol=2e-4, atol=2e-5)
         print("spmd sub-block pipeline == local")
+    """, n_dev=4)
+
+
+def test_spmd_general_schedule_matches_local():
+    """The unrolled per-step-ppermute SPMD path (random / balanced /
+    sim-compiled schedules) must reproduce the local executor, including
+    under sub-block pipelining."""
+    run_sub("""
+        from repro.core import nomad, partition, objective
+        from repro.core.schedule import OwnershipSchedule
+        from repro.core.stepsize import PowerSchedule
+        from repro.launch.mesh import make_mc_mesh
+        rng = np.random.default_rng(2)
+        m, n, k, p = 48, 24, 6, 4
+        nnz = 500
+        rows = rng.integers(0, m, nnz); cols = rng.integers(0, n, nnz)
+        vals = rng.normal(size=nnz)
+        W0, H0 = objective.init_factors_np(0, m, n, k)
+        W0 = W0.astype(np.float32); H0 = H0.astype(np.float32)
+        sched = PowerSchedule(alpha=0.03, beta=0.0)
+        mesh = make_mc_mesh(p)
+        for spec, sub in (("random", 1), ("balanced", 1), ("random", 2)):
+            kw = dict(schedule=spec, schedule_seed=3)
+            local = nomad.NomadRingEngine(
+                br=partition.pack(rows, cols, vals, m, n, p, **kw),
+                k=k, lam=0.01, stepsize=sched)
+            local.init_factors(W0, H0)
+            local.run_epoch(); local.run_epoch()
+            Wl, Hl = local.factors()
+            br = partition.pack(rows, cols, vals, m, n, p,
+                                sub_blocks=sub, **kw)
+            spmd = nomad.NomadRingEngine(br=br, k=k, lam=0.01,
+                                         stepsize=sched, mesh=mesh,
+                                         sub_blocks=sub)
+            spmd.init_factors(W0, H0)
+            spmd.run_epoch(); spmd.run_epoch()
+            Ws, Hs = spmd.factors()
+            rtol, atol = (2e-4, 2e-5) if sub > 1 else (2e-5, 2e-6)
+            np.testing.assert_allclose(Ws, Wl, rtol=rtol, atol=atol)
+            np.testing.assert_allclose(Hs, Hl, rtol=rtol, atol=atol)
+        print("spmd general schedules == local")
     """, n_dev=4)
 
 

@@ -76,6 +76,40 @@ def test_extend_assign_is_sticky_and_balanced(seed, p, count):
     assert loads.max() <= (w.sum() + len(w)) / p + w.max() + 1
 
 
+@settings(max_examples=30, deadline=None)
+@given(**strategies.ASSIGN_WEIGHTS)
+def test_balanced_assign_lpt_bound(seed, p, count):
+    """The greedy-lightest-bin guarantee, in the packer's own (+1)
+    accounting: max_load <= ideal + max_weight, where ideal is the mean
+    load.  (When the heaviest bin received its last item it was the
+    lightest bin, hence at most the final mean.)"""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 100, count)
+    assign = P.balanced_assign(w, p)
+    eff = w + 1                          # balanced_assign's +1 accounting
+    loads = np.bincount(assign, weights=eff, minlength=p)
+    assert loads.max() <= eff.sum() / p + eff.max()
+
+
+@settings(max_examples=30, deadline=None)
+@given(**strategies.ASSIGN_WEIGHTS)
+def test_extend_assign_sticky_and_lpt_bound(seed, p, count):
+    """extend_assign never moves a placed item, and the combined
+    placement keeps the greedy list-scheduling bound
+    max_load <= ideal + max_weight (it holds for *any* arrival order, so
+    stickiness costs nothing in the worst case)."""
+    rng = np.random.default_rng(seed)
+    w0 = rng.integers(0, 100, count)
+    base = P.balanced_assign(w0, p)
+    n_new = int(rng.integers(0, count + 1))
+    w1 = rng.integers(0, 100, n_new)
+    out = P.extend_assign(base, w0, w1, p)
+    assert np.array_equal(out[:count], base)
+    eff = np.concatenate([w0, w1]) + 1
+    loads = np.bincount(out, weights=eff, minlength=p)
+    assert loads.max() <= eff.sum() / p + eff.max()
+
+
 def test_shard_unshard_roundtrip():
     rng = np.random.default_rng(0)
     m, n, k, p = 37, 23, 5, 4

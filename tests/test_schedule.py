@@ -1,0 +1,321 @@
+"""Ownership-schedule IR properties (DESIGN.md §8).
+
+The contract under test: for *every* valid ``OwnershipSchedule`` —
+ring, compiled random routing, compiled queue-aware routing,
+hypothesis-drawn arbitrary visit orders, and schedules compiled from
+async-simulator logs — the engine applies each rating exactly once per
+epoch and its output matches a serial replay of
+``BlockedRatings.schedule_order()``; the ring instance additionally
+bitwise-matches the pre-IR engine (scan + ``jnp.roll``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import strategies
+from hypothesis_compat import given, settings
+
+from repro import api
+from repro.core import nomad, objective, partition as P, serial
+from repro.core.schedule import OwnershipSchedule
+from repro.core.stepsize import PowerSchedule
+
+
+def _make_schedule(spec, p, seed):
+    if spec == "drawn":
+        return strategies.drawn_schedule(seed, p)
+    return OwnershipSchedule.resolve(spec, p, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def problem(tiny_mc_problem):
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    return api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                         n=pr["n"], test=pr["test"])
+
+
+# --------------------------------------------------------------------- #
+# IR invariants                                                          #
+# --------------------------------------------------------------------- #
+
+def test_ring_schedule_is_canonical():
+    p = 5
+    s = OwnershipSchedule.ring(p)
+    assert s.is_ring and s.n_steps == p and s.active.all()
+    q, b = np.meshgrid(np.arange(p), np.arange(p), indexing="ij")
+    assert np.array_equal(s.step_of, (q - b) % p)
+    # every transition is the historical +1 shift, no entry permute
+    assert s.entry_sources() is None
+    roll = np.broadcast_to((np.arange(p) - 1) % p, (p, p))
+    assert np.array_equal(s.perm_sources(), roll)
+
+
+def test_named_constructors_are_deterministic():
+    a = OwnershipSchedule.random(6, seed=3)
+    b = OwnershipSchedule.random(6, seed=3)
+    assert a == b and hash(a) == hash(b)
+    assert a != OwnershipSchedule.random(6, seed=4)
+    loads = np.arange(36).reshape(6, 6)
+    c = OwnershipSchedule.balanced(6, seed=3, loads=loads)
+    assert c == OwnershipSchedule.balanced(6, seed=3, loads=loads)
+
+
+def test_invalid_schedules_rejected():
+    # a non-permutation row: two workers hold the same block
+    with pytest.raises(ValueError, match="permutation"):
+        OwnershipSchedule(p=2, table=[[0, 0], [1, 0]],
+                          active=[[True, True], [True, True]])
+    # valid rows but a cell covered twice (and another never)
+    with pytest.raises(ValueError, match="exactly once"):
+        OwnershipSchedule(p=2, table=[[0, 1], [0, 1]],
+                          active=[[True, True], [True, True]])
+    # visit list must cover every cell
+    with pytest.raises(ValueError, match="one visit per cell"):
+        OwnershipSchedule.from_visits(2, [(0, 0), (1, 1)])
+    # p mismatch surfaces at resolve time
+    with pytest.raises(ValueError, match="p=3"):
+        OwnershipSchedule.resolve(OwnershipSchedule.ring(3), 4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(**strategies.SCHEDULES)
+def test_schedule_block_trajectories_are_consistent(seed, p, spec):
+    """Walking entry_sources + perm_sources reproduces every table row
+    and returns all blocks home — the property the engine's permutes
+    rely on — and active cells cover the grid exactly once."""
+    s = _make_schedule(spec, p, seed)
+    assert s.n_steps >= p
+    pos = np.arange(p)                  # Hs[q] = block held by worker q
+    ent = s.entry_sources()
+    if ent is not None:
+        pos = pos[ent]
+    perms = s.perm_sources()
+    for step in range(s.n_steps):
+        assert np.array_equal(pos, s.table[step])
+        pos = pos[perms[step]]
+    assert np.array_equal(pos, np.arange(p))
+    cells = {(q, s.table[t, q]) for t in range(s.n_steps)
+             for q in range(p) if s.active[t, q]}
+    assert len(cells) == p * p
+
+
+# --------------------------------------------------------------------- #
+# Pack layout under a schedule                                           #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("spec,seed", [
+    ("ring", 0), ("random", 1), ("balanced", 2), ("drawn", 3),
+])
+def test_pack_covers_each_rating_once_per_schedule(spec, seed):
+    p, m, n, nnz = 4, 40, 20, 300
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    sched = _make_schedule(spec, p, seed)
+    br = P.pack(rows, cols, vals, m, n, p, schedule=sched)
+    assert br.schedule == sched and br.n_steps == sched.n_steps
+    order = br.schedule_order()
+    assert np.array_equal(np.sort(order), np.arange(nnz))
+    # idle slots are exact no-ops (empty cells); active slots hold the
+    # scheduled cell
+    for s in range(br.n_steps):
+        for q in range(p):
+            g = br.gid[q, s][br.mask[q, s]]
+            if not sched.active[s, q]:
+                assert len(g) == 0
+            elif len(g):
+                assert np.all(br.row_owner[rows[g]] == q)
+                assert np.all(br.col_block[cols[g]]
+                              == sched.table[s, q])
+    # the wave layout flattens to the same serial order
+    g_seq = br.gid[br.mask]
+    g_wave = br.wave_gid[br.wave_mask]
+    assert np.array_equal(g_seq, g_wave)
+
+
+# --------------------------------------------------------------------- #
+# Engine == serial replay of the witness, for every schedule             #
+# --------------------------------------------------------------------- #
+
+def _engine_vs_replay(spec, seed, impl, epochs=2):
+    p, m, n, k, nnz = 4, 40, 20, 6, 300
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    sched = _make_schedule(spec, p, seed)
+    br = P.pack(rows, cols, vals, m, n, p, schedule=sched)
+    W0, H0 = objective.init_factors_np(seed, m, n, k)
+    W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
+    lr = PowerSchedule(alpha=0.02, beta=0.1)
+    eng = nomad.NomadRingEngine(br=br, k=k, lam=0.01, stepsize=lr,
+                                impl=impl)
+    eng.init_factors(W0, H0)
+    order = br.schedule_order()
+    Wr, Hr = jnp.asarray(W0), jnp.asarray(H0)
+    for e in range(epochs):
+        eng.run_epoch()
+        Wr, Hr = serial.replay_jax(Wr, Hr, rows, cols, vals, order,
+                                   lr(e), 0.01)
+    W1, H1 = eng.factors()
+    np.testing.assert_allclose(np.asarray(Wr), W1, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(Hr), H1, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+@pytest.mark.parametrize("spec,seed", [
+    ("ring", 0), ("random", 5), ("balanced", 6), ("drawn", 7),
+])
+def test_engine_matches_serial_replay_for_any_schedule(spec, seed, impl):
+    """Engine output over two epochs == serial replay of
+    schedule_order() per epoch — serializability holds for every
+    schedule, and (via epoch 2) every schedule really routes all blocks
+    home before the next epoch starts."""
+    _engine_vs_replay(spec, seed, impl)
+
+
+@settings(max_examples=8, deadline=None)
+@given(**strategies.SCHEDULES)
+def test_engine_serializability_property(seed, p, spec):
+    m, n, k, nnz = 30, 15, 4, 200
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    sched = _make_schedule(spec, p, seed)
+    br = P.pack(rows, cols, vals, m, n, p, schedule=sched)
+    W0, H0 = objective.init_factors_np(seed, m, n, k)
+    W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
+    eng = nomad.NomadRingEngine(
+        br=br, k=k, lam=0.01,
+        stepsize=PowerSchedule(alpha=0.02, beta=0.0))
+    eng.init_factors(W0, H0)
+    eng.run_epoch()
+    W1, H1 = eng.factors()
+    Wr, Hr = serial.replay_jax(W0, H0, rows, cols, vals,
+                               br.schedule_order(), 0.02, 0.01)
+    np.testing.assert_allclose(np.asarray(Wr), W1, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(Hr), H1, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+def test_ring_engine_bitwise_matches_pre_ir_roll_epoch(tiny_mc_problem,
+                                                       impl):
+    """The refactored local executor under the default (ring) schedule
+    must reproduce the pre-IR epoch — a scan with a hard-coded
+    ``jnp.roll(Hs, 1)`` — bit for bit, for both the sequential and the
+    wave kernel."""
+    from repro.kernels import ops as kops
+    from repro.kernels.policy import KernelPolicy
+
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    m, n, k = pr["m"], pr["n"], pr["k"]
+    p = 4
+    br = P.pack(rows, cols, vals, m, n, p)
+    W0, H0 = objective.init_factors_np(0, m, n, k)
+    W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
+
+    policy = KernelPolicy(impl=impl)
+
+    @jax.jit
+    def legacy_epoch(Ws, Hs, rows, cols, vals, mask, lr):
+        def ring_step(carry, step_data):
+            Ws, Hs = carry
+            r, c, v, mk = step_data
+            Ws, Hs = jax.vmap(
+                lambda W, H, rr, cc, vv, mm: kops.block_sgd(
+                    W, H, rr, cc, vv, mm, lr, 0.01, policy=policy)
+            )(Ws, Hs, r, c, v, mk)
+            Hs = jnp.roll(Hs, 1, axis=0)
+            return (Ws, Hs), ()
+        (Ws, Hs), _ = jax.lax.scan(
+            ring_step, (Ws, Hs),
+            (jnp.swapaxes(rows, 0, 1), jnp.swapaxes(cols, 0, 1),
+             jnp.swapaxes(vals, 0, 1), jnp.swapaxes(mask, 0, 1)))
+        return Ws, Hs
+
+    eng = nomad.NomadRingEngine(br=br, k=k, lam=0.01, impl=impl,
+                                stepsize=PowerSchedule(alpha=0.02,
+                                                       beta=0.0))
+    eng.init_factors(W0, H0)
+    Ws0, Hs0 = eng.Ws, eng.Hs
+    data = eng.policy.cell_arrays(br, pipelined=False)
+    data = tuple(jnp.asarray(a) for a in data)
+    eng.run_epoch()
+    eng.run_epoch()
+    Wl, Hl = Ws0, Hs0
+    for _ in range(2):
+        Wl, Hl = legacy_epoch(Wl, Hl, *data, jnp.float32(0.02))
+    assert np.array_equal(np.asarray(eng.Ws), np.asarray(Wl))
+    assert np.array_equal(np.asarray(eng.Hs), np.asarray(Hl))
+
+
+# --------------------------------------------------------------------- #
+# API integration: config, sim -> engine replay, streaming               #
+# --------------------------------------------------------------------- #
+
+def test_nomad_config_validates_schedule_spec():
+    with pytest.raises(ValueError, match="schedule"):
+        api.NomadConfig(p=4, schedule="zigzag")
+    with pytest.raises(ValueError, match="p=3"):
+        api.NomadConfig(p=4, schedule=OwnershipSchedule.ring(3))
+    with pytest.warns(DeprecationWarning, match="stepsize"):
+        cfg = api.NomadConfig(p=4, schedule=PowerSchedule(alpha=0.1))
+    assert cfg.schedule == "ring" and cfg.stepsize.alpha == 0.1
+
+
+def test_solve_ring_schedule_bitwise_default(tiny_mc_problem, problem):
+    """NomadConfig(schedule='ring') output is bitwise-identical to the
+    pre-IR default config (same packing, same executor path)."""
+    base = api.solve(problem, api.NomadConfig(k=8, p=4, epochs=3))
+    ring = api.solve(problem, api.NomadConfig(k=8, p=4, epochs=3,
+                                              schedule="ring"))
+    assert np.array_equal(base.W, ring.W)
+    assert np.array_equal(base.H, ring.H)
+
+
+@pytest.mark.parametrize("straggle", [False, True])
+def test_sim_emitted_schedule_replays_on_engine(problem, straggle):
+    """AsyncSimConfig(emit_schedule=True) leaves a replayable schedule in
+    extras; replaying it through NomadConfig applies each rating exactly
+    once per epoch and stays serializable (the acceptance property)."""
+    speed = (1.0, 1.0, 0.3, 1.0) if straggle else None
+    sim = api.solve(problem, api.AsyncSimConfig(
+        k=8, p=4, epochs=1.0, emit_schedule=True, speed=speed,
+        load_balance=straggle))
+    sched = sim.extras["schedule"]
+    assert isinstance(sched, OwnershipSchedule) and sched.p == 4
+
+    cfg = api.NomadConfig(k=8, p=4, epochs=1, schedule=sched)
+    res = api.solve(problem, cfg)
+    br = problem.packed(4, schedule=sched)
+    order = br.schedule_order()
+    assert np.array_equal(np.sort(order), np.arange(problem.nnz))
+    W0, H0 = objective.init_factors(jax.random.key(0), problem.m,
+                                    problem.n, 8)
+    Wr, Hr = serial.replay_jax(np.asarray(W0), np.asarray(H0),
+                               problem.rows, problem.cols, problem.vals,
+                               order, cfg.make_stepsize()(0), cfg.lam)
+    np.testing.assert_allclose(np.asarray(Wr), res.W, rtol=2e-5,
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(Hr), res.H, rtol=2e-5,
+                               atol=2e-6)
+
+
+@pytest.mark.parametrize("spec", ["random", "balanced"])
+def test_partial_fit_sticky_schedule_bitwise(spec):
+    """Streaming under a non-ring schedule: partial_fit (incremental
+    repack, sticky schedule) is bitwise-identical to a warm-started
+    batch solve of the extended problem — the §7 guarantee extends to
+    the schedule IR."""
+    rows, cols, vals = strategies.coo_problem(11, 30, 12, 250)
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=30, n=12)
+    cfg = api.NomadConfig(k=4, p=3, epochs=2, schedule=spec,
+                          schedule_seed=2,
+                          stepsize=PowerSchedule(alpha=0.04, beta=0.05))
+    res = api.solve(problem, cfg)
+    delta = problem.extend([1, 31], [0, 5], [0.5, -0.25], m_new=2)
+    inc = api.partial_fit(res, delta, cfg)
+    ext = inc.extras["problem"]
+    from repro.core.objective import grow_factors
+    W2, H2 = grow_factors(res.W, res.H, 2, 0, seed=cfg.seed)
+    warm = dataclasses.replace(res, W=W2, H=H2)
+    batch = api.solve(ext, cfg, warm_start=warm)
+    assert np.array_equal(inc.W, batch.W)
+    assert np.array_equal(inc.H, batch.H)

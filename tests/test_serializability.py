@@ -105,7 +105,7 @@ def test_hogwild_is_not_serializable_but_nomad_is(tiny_mc_problem):
     br = partition.pack(rows, cols, vals, m, n, 4)
     eng = nomad.NomadRingEngine(
         br=br, k=k, lam=0.01,
-        schedule=PowerSchedule(alpha=0.02, beta=0.0))
+        stepsize=PowerSchedule(alpha=0.02, beta=0.0))
     eng.init_factors(W0f, H0f)
     eng.run_epoch()
     W1, H1 = eng.factors()

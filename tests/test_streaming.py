@@ -130,7 +130,7 @@ def _stream_problem(seed=0, m=36, n=20, nnz=260):
 
 def _mk_config(name, kernel="xla"):
     kw = dict(k=4, lam=0.01, epochs=1, seed=0,
-              schedule=PowerSchedule(alpha=0.04, beta=0.05))
+              stepsize=PowerSchedule(alpha=0.04, beta=0.05))
     if name == "nomad":
         return api.NomadConfig(**kw, p=2, kernel=kernel)
     if name == "dsgd":
@@ -240,9 +240,11 @@ def test_partial_fit_chain_stays_incremental():
     ext = res.extras["problem"]
     policy = cfg.kernel
     br = ext.packed(cfg.p, balanced=cfg.balanced, waves=policy.wave,
-                    sub_blocks=policy.sub_blocks)
-    assert br is ext._pack_cache[
-        (cfg.p, cfg.balanced, policy.wave, None, policy.sub_blocks)]
+                    sub_blocks=policy.sub_blocks, schedule=cfg.schedule,
+                    schedule_seed=cfg.schedule_seed)
+    assert br is ext._pack_cache[api.MCProblem._pack_key(
+        cfg.p, cfg.balanced, policy.wave, None, policy.sub_blocks,
+        cfg.schedule, cfg.schedule_seed)]
     assert br.m == ext.m and int(br.mask.sum()) == ext.nnz
 
 
@@ -253,7 +255,7 @@ def test_engine_grow_one_sided_override_keeps_seeded_init():
     rows, cols, vals = strategies.coo_problem(2, 20, 10, 150)
     br = P.pack(rows, cols, vals, 20, 10, 2)
     eng = nomad.NomadRingEngine(br=br, k=4, lam=0.01,
-                                schedule=PowerSchedule())
+                                stepsize=PowerSchedule())
     W0, H0 = objective.init_factors_np(0, 20, 10, 4)
     W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
     eng.init_factors(W0, H0)
@@ -311,7 +313,7 @@ def test_engine_grow_rejects_non_sticky_packing():
     rows, cols, vals = strategies.coo_problem(0, 20, 10, 150)
     br = P.pack(rows, cols, vals, 20, 10, 2)
     eng = nomad.NomadRingEngine(br=br, k=4, lam=0.01,
-                                schedule=PowerSchedule())
+                                stepsize=PowerSchedule())
     W0, H0 = objective.init_factors_np(0, 20, 10, 4)
     eng.init_factors(W0.astype(np.float32), H0.astype(np.float32))
     # a fresh LPT pack of the extended problem is not a sticky extension
@@ -424,7 +426,7 @@ def test_async_sim_solver_with_arrivals():
     late = tuple(range(problem.nnz - 60, problem.nnz))
     cfg = api.AsyncSimConfig(k=4, lam=0.01, epochs=1.5, seed=0, p=3,
                              arrivals=((50.0, late),),
-                             schedule=PowerSchedule(alpha=0.04, beta=0.05))
+                             stepsize=PowerSchedule(alpha=0.04, beta=0.05))
     res = api.solve(problem, cfg)
     assert res.extras["n_updates"] > 0
     touched = {g for _, g in res.extras["update_log"]}

@@ -143,7 +143,7 @@ def test_wave_engine_matches_sequential_engine(tiny_mc_problem):
     for impl in ("xla", "wave"):
         eng = nomad.NomadRingEngine(
             br=br, k=k, lam=0.01,
-            schedule=PowerSchedule(alpha=0.02, beta=0.0), impl=impl)
+            stepsize=PowerSchedule(alpha=0.02, beta=0.0), impl=impl)
         eng.init_factors(W0.astype(np.float32), H0.astype(np.float32))
         eng.run_epoch()
         eng.run_epoch()
@@ -167,7 +167,7 @@ def test_wave_engine_matches_serial_replay(tiny_mc_problem):
     br = P.pack(rows, cols, vals, m, n, 4)
     eng = nomad.NomadRingEngine(
         br=br, k=k, lam=0.01,
-        schedule=PowerSchedule(alpha=0.02, beta=0.0), impl="wave")
+        stepsize=PowerSchedule(alpha=0.02, beta=0.0), impl="wave")
     eng.init_factors(W0f, H0f)
     eng.run_epoch()
     W1, H1 = eng.factors()
@@ -185,4 +185,4 @@ def test_wave_impl_requires_wave_layout():
                 rng.normal(size=50), 10, 6, 2, waves=False)
     with pytest.raises(ValueError, match="wave layout"):
         nomad.NomadRingEngine(br=br, k=4, lam=0.01,
-                              schedule=PowerSchedule(), impl="wave")
+                              stepsize=PowerSchedule(), impl="wave")
