@@ -1,0 +1,87 @@
+"""Driver-level dispatch benchmark (DESIGN.md §9): loop vs fused
+end-to-end updates/s.
+
+Rows are recorded under ``driver/`` in ``BENCH_kernels.json``:
+
+* ``driver/{shape}_{kernel}_loop``  — per-epoch Python loop dispatch
+  (one device program + one blocking eval sync per epoch), measured
+  through ``api.solve`` so cold-start and result packaging count.
+* ``driver/{shape}_{kernel}_fused`` — the fused on-device driver (one
+  jitted scan over the epochs, flattened epoch stream, on-device trace);
+  the derived ``speedup=`` is against the matching loop row.
+* ``..._evalN`` variants re-run the fused path at a sparser trace
+  cadence (``record_every=N``) — on the loop path every skipped record
+  also skips a host sync, on the fused path it only skips on-device
+  work, so the cadence sensitivity of the two drivers differs.
+
+The ``bench`` shape is exactly the ``schedule/engine_ring`` benchmark's
+problem (``common.small_netflix``, p=8, k=8, wave kernel, eval every
+epoch) so the two records stay comparable.  Set ``NOMAD_BENCH_SMOKE=1``
+to shrink everything to a seconds-long smoke sweep (the CI bench job
+does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro import api
+from repro.core.stepsize import PowerSchedule
+from .common import small_netflix
+
+_SMOKE = bool(os.environ.get("NOMAD_BENCH_SMOKE"))
+
+
+def _shapes():
+    if _SMOKE:
+        return [("smoke", api.MCProblem.synthetic(
+            m=120, n=40, nnz=2000, k=8, seed=0), 8, 2, ("wave",))]
+    bench = small_netflix(k=8)
+    bench_problem = api.MCProblem(
+        rows=bench["train"][0], cols=bench["train"][1],
+        vals=bench["train"][2], m=bench["m"], n=bench["n"],
+        test=bench["test"])
+    tall = api.MCProblem.synthetic(m=3000, n=300, nnz=90_000, k=8,
+                                   seed=1)
+    return [
+        # the schedule/engine_ring shape: p=8, wave kernel, 3 epochs
+        ("bench", bench_problem, 8, 3, ("wave", "xla")),
+        # a taller uniform problem (denser waves, bigger shards)
+        ("tall", tall, 8, 3, ("wave",)),
+    ]
+
+
+def _solve_row(out, name, problem, cfg, epochs):
+    api.solve(problem, cfg)                 # jit warm-up
+    warm = api.solve(problem, cfg)          # steady-state timing
+    ups = problem.nnz * epochs / max(warm.wall_time, 1e-9)
+    rmse = float(warm.trace_rmse[-1])
+    out.append((name, warm.wall_time * 1e6 / epochs,
+                f"updates_per_s={ups:.0f} rmse={rmse:.4f}"))
+    return ups
+
+
+def driver_rows() -> list:
+    out: list = []
+    for shape, problem, p, epochs, kernels in _shapes():
+        for kernel in kernels:
+            cfg = api.NomadConfig(
+                k=8, p=p, lam=0.01, epochs=epochs, kernel=kernel,
+                stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+            loop_ups = _solve_row(
+                out, f"driver/{shape}_{kernel}_loop", problem,
+                dataclasses.replace(cfg, dispatch="loop"), epochs)
+            fused_ups = _solve_row(
+                out, f"driver/{shape}_{kernel}_fused", problem, cfg,
+                epochs)
+            name, us, derived = out[-1]
+            out[-1] = (name, us,
+                       f"{derived} speedup={fused_ups / loop_ups:.2f}")
+            if kernel == kernels[0]:
+                # cadence sensitivity: trace every epochs-th epoch only
+                _solve_row(
+                    out, f"driver/{shape}_{kernel}_fused_eval{epochs}",
+                    problem,
+                    dataclasses.replace(cfg, record_every=epochs),
+                    epochs)
+    return out

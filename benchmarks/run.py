@@ -19,8 +19,36 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_kernels.json")
 
 
+def _run_meta() -> dict:
+    """Environment stamp merged into every record write (``__meta__``):
+    without the git sha / jax version / backend / core count, numbers
+    recorded across PRs are not a comparable perf trajectory."""
+    import subprocess
+
+    import jax
+
+    try:
+        # --dirty: numbers recorded from an uncommitted tree must not be
+        # attributed to the last commit they happen to sit on
+        sha = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        sha = "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count() or 1,
+    }
+
+
 def _write_kernel_record(rows) -> None:
-    """Persist kernel + solver rows as {name: {us_per_call, **derived}}.
+    """Persist kernel + solver rows as {name: {us_per_call, **derived}},
+    plus a ``__meta__`` stamp (git sha, jax version, backend, cpu count)
+    so the record is a comparable perf trajectory across PRs.
 
     Merge granularity is the ``prefix/`` namespace: a run replaces every
     entry of the namespaces it produced (so renamed/deleted rows don't
@@ -51,6 +79,7 @@ def _write_kernel_record(rows) -> None:
                 except ValueError:
                     entry[key] = val
         record[name] = entry
+    record["__meta__"] = _run_meta()
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -64,7 +93,7 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
-    from . import schedule_bench, stream_bench
+    from . import driver_bench, schedule_bench, stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -81,6 +110,7 @@ def main() -> None:
         ("solver", solver_bench.solver_rows),
         ("stream", stream_bench.stream_rows),
         ("schedule", schedule_bench.schedule_rows),
+        ("driver", driver_bench.driver_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -93,7 +123,8 @@ def main() -> None:
             rows = fn()
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
-            if name in ("kernel", "solver", "stream", "schedule"):
+            if name in ("kernel", "solver", "stream", "schedule",
+                        "driver"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -8,7 +8,12 @@ Two families of rows, both recorded under ``schedule/`` in
   random schedule needs ``n_steps > p`` conflict-free steps (queueing
   collisions), so its epoch carries proportional idle padding; the
   queue-aware balanced constructor compresses most of that back out —
-  the static mirror of the paper's §3.3 result.
+  the static mirror of the paper's §3.3 result.  Each spec is measured
+  under both training drivers: the plain ``schedule/engine_{spec}`` row
+  is the per-epoch loop dispatch (the same measurement as before the
+  fused driver existed, so the cross-PR trajectory stays comparable)
+  and ``schedule/engine_{spec}_fused`` the fused on-device driver
+  (DESIGN.md §9), with the loop/fused split in the derived fields.
 * ``schedule/sim_*`` — discrete-event simulator throughput for uniform
   vs queue-aware routing, with and without stragglers (speed of one
   worker cut to 1/4).  This is the virtual-time prediction the engine
@@ -35,21 +40,28 @@ def _engine_rows(out: list) -> None:
                             vals=pr["train"][2], m=pr["m"], n=pr["n"],
                             test=pr["test"])
     for spec in ("ring", "random", "balanced"):
-        cfg = api.NomadConfig(k=_K, p=_P, lam=0.01, epochs=_EPOCHS,
-                              kernel="wave", schedule=spec,
-                              schedule_seed=0,
-                              stepsize=PowerSchedule(alpha=0.05,
-                                                     beta=0.02))
-        api.solve(problem, cfg)               # jit warm-up
-        warm = api.solve(problem, cfg)        # steady-state timing
         br = problem.packed(_P, waves=True, schedule=spec,
                             schedule_seed=0)
-        ups = problem.nnz * _EPOCHS / max(warm.wall_time, 1e-9)
-        rmse = float(warm.trace_rmse[-1])
-        out.append((f"schedule/engine_{spec}",
-                    warm.wall_time * 1e6 / _EPOCHS,
-                    f"n_steps={br.n_steps} updates_per_s={ups:.0f} "
-                    f"rmse={rmse:.4f}"))
+        ups = {}
+        for dispatch in ("loop", "fused"):
+            cfg = api.NomadConfig(k=_K, p=_P, lam=0.01, epochs=_EPOCHS,
+                                  kernel="wave", schedule=spec,
+                                  schedule_seed=0, dispatch=dispatch,
+                                  stepsize=PowerSchedule(alpha=0.05,
+                                                         beta=0.02))
+            api.solve(problem, cfg)           # jit warm-up
+            warm = api.solve(problem, cfg)    # steady-state timing
+            ups[dispatch] = problem.nnz * _EPOCHS / max(warm.wall_time,
+                                                        1e-9)
+            rmse = float(warm.trace_rmse[-1])
+            suffix = "" if dispatch == "loop" else "_fused"
+            derived = (f"n_steps={br.n_steps} "
+                       f"updates_per_s={ups[dispatch]:.0f} "
+                       f"rmse={rmse:.4f}")
+            if dispatch == "fused":
+                derived += f" speedup={ups['fused'] / ups['loop']:.2f}"
+            out.append((f"schedule/engine_{spec}{suffix}",
+                        warm.wall_time * 1e6 / _EPOCHS, derived))
 
 
 def _sim_rows(out: list) -> None:

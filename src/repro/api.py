@@ -427,13 +427,26 @@ class NomadConfig(SolverConfig):
     (§3.3 queue-aware routing weighted by per-cell nnz), or an explicit
     :class:`OwnershipSchedule` — e.g. the replayable schedule an
     ``AsyncSimConfig(emit_schedule=True)`` run leaves in
-    ``FitResult.extras["schedule"]``."""
+    ``FitResult.extras["schedule"]``.
+
+    ``dispatch`` selects the training driver (DESIGN.md §9):
+    ``"fused"`` (default) runs the whole epoch loop as one jitted
+    ``lax.scan`` on device — one host sync per ``fuse_epochs`` block
+    (``None`` = all epochs in one program) instead of one dispatch plus
+    one blocking eval sync per epoch; ``"loop"`` keeps the historical
+    per-epoch Python loop.  Both record the held-out RMSE every
+    ``record_every`` epochs (plus always the final one) and are
+    bitwise-identical in W, H and trace; warm starts resume bitwise at
+    any block boundary."""
     p: int = 4
     kernel: Union[str, KernelPolicy] = "xla"
     balanced: bool = True
     sub_blocks: int = 1
     schedule: Union[str, OwnershipSchedule] = "ring"
     schedule_seed: int = 0
+    dispatch: str = "fused"
+    fuse_epochs: Optional[int] = None
+    record_every: int = 1
 
     _schedule_is_ownership = True
 
@@ -441,6 +454,16 @@ class NomadConfig(SolverConfig):
         super().__post_init__()   # legacy PowerSchedule-as-schedule shim
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.dispatch not in ("fused", "loop"):
+            raise ValueError(
+                f"dispatch={self.dispatch!r} not in ('fused', 'loop')")
+        if self.fuse_epochs is not None and self.fuse_epochs < 1:
+            raise ValueError(
+                f"fuse_epochs must be >= 1 (or None for one program), "
+                f"got {self.fuse_epochs}")
+        if self.record_every < 1:
+            raise ValueError(
+                f"record_every must be >= 1, got {self.record_every}")
         if self.schedule is None:  # None == ring everywhere (resolve/pack)
             object.__setattr__(self, "schedule", "ring")
         if isinstance(self.schedule, OwnershipSchedule):
@@ -789,7 +812,10 @@ def _nomad_run(eng, config: NomadConfig, test, start,
     """Train an initialized engine for ``config.epochs`` starting at
     schedule position ``start`` and package the result."""
     eng.epoch_idx = int(start)      # schedule resumes where it left off
-    trace = eng.train(int(config.epochs), test=test, verbose=verbose)
+    trace = eng.train(int(config.epochs), test=test, verbose=verbose,
+                      record_every=config.record_every,
+                      dispatch=config.dispatch,
+                      fuse_epochs=config.fuse_epochs)
     W, H = eng.factors()
     epochs, rmses = _as_trace_arrays(trace)
     return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,

@@ -17,10 +17,13 @@ Layout:   <dir>/step_<N>/shard_<r>.npz  +  <dir>/step_<N>/COMMITTED
 ``save_fit_result``/``restore_fit_result`` round-trip a full
 ``repro.api.FitResult`` — factors, trace arrays, epochs done, timings,
 and the exact solver config (including a ``KernelPolicy``, the step-size
-``PowerSchedule`` and an ``OwnershipSchedule``) — so a warm-start /
-``partial_fit`` chain survives a process restart bitwise
+``PowerSchedule``, an ``OwnershipSchedule``, and the fused-driver
+fields ``dispatch``/``fuse_epochs``/``record_every``) — so a
+warm-start / ``partial_fit`` chain survives a process restart bitwise
 (``solve(problem, cfg, warm_start=restored)`` equals the uninterrupted
-run; asserted in tests/test_checkpoint.py).
+run regardless of which dispatch either side used — fused block
+boundaries are exact resume points; asserted in
+tests/test_checkpoint.py).
 """
 from __future__ import annotations
 

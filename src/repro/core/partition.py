@@ -711,6 +711,85 @@ def repack_delta(
         sub_starts=sub_starts, schedule=sched)
 
 
+def epoch_stream(br: BlockedRatings) -> Tuple[np.ndarray, ...]:
+    """Flatten one schedule epoch into a dense stream of conflict-free
+    ``p``-wide update slots over *globally flat* factor indices — the
+    layout the fused local driver scans (DESIGN.md §9).
+
+    The step-scan executor pads every cell to the global ``max_nnz`` /
+    ``n_waves``, so its per-epoch trip count is ``n_steps x global_max``
+    — and on skewed (Netflix-shaped) data a hot item column puts a
+    ~max_nnz-long serial conflict chain in *every* step, making almost
+    all of those iterations masked padding.  It also physically moves
+    the H blocks between workers (a gather per step) even though on a
+    single device "ownership" is just an index range.
+
+    The stream removes both:
+
+    * indices are globalized against the *home* placement —
+      ``owner * m_local + row_local`` / ``block * n_local + col_local``
+      into the flattened ``(p * m_local, k)`` / ``(p * n_local, k)``
+      factor arrays — so no block ever moves and no entry/per-step
+      permutation exists at all;
+    * slot ``t`` of step ``s`` holds each worker's ``t``-th rating of
+      its step-``s`` cell, with per-step trip counts
+      ``L_s = max_q nnz_cell(q, s)``: the scan runs
+      ``sum_s L_s`` slots, each an up-to-``p``-wide conflict-free batch
+      (a step's active cells touch pairwise-disjoint row shards and
+      item blocks — the generalized-diagonal invariant — so the batch
+      is exactly a sequential execution of its entries).
+
+    Executing slots in order realizes the exact packed serial
+    linearization (``schedule_order``): within a cell ratings stay in
+    their stored wave-major order, concurrent cells are disjoint, and
+    steps complete in sequence.  Masked padding slots are exact no-ops,
+    so the stream is bitwise-identical to both the sequential and the
+    wave-batched step-scan executors (asserted in tests/test_driver.py).
+
+    Returns ``(rows, cols, vals, mask)`` of shape ``(sum_s L_s, p)``
+    with int32 global flat indices.
+    """
+    p = br.p
+    real = br.nnz_cell                                 # (p, n_steps)
+    # >= 1 so a fully-idle step still holds one (all-masked) slot
+    L = np.maximum(real.max(axis=0), 1).astype(np.int64)
+    total = int(L.sum())
+    R = np.zeros((total, p), dtype=np.int32)
+    C = np.zeros((total, p), dtype=np.int32)
+    V = np.zeros((total, p), dtype=np.float32)
+    M = np.zeros((total, p), dtype=bool)
+    off = 0
+    for s in range(br.n_steps):
+        ls = int(L[s])
+        for q in range(p):
+            b = br.block_at(q, s)
+            cnt = int(real[q, s])
+            R[off:off + cnt, q] = (q * br.m_local
+                                   + br.rows[q, s, :cnt])
+            C[off:off + cnt, q] = (b * br.n_local
+                                   + br.cols[q, s, :cnt])
+            V[off:off + cnt, q] = br.vals[q, s, :cnt]
+            M[off:off + cnt, q] = br.mask[q, s, :cnt]
+        off += ls
+    return R, C, V, M
+
+
+def step_major_cells(arrays) -> Tuple[np.ndarray, ...]:
+    """Transpose packed cell arrays from the canonical ``[worker, step,
+    ...]`` layout to contiguous ``[step, worker, ...]``.
+
+    The canonical layout is worker-major because the SPMD engine shards
+    the leading axis over the device mesh; the local executor instead
+    ``lax.scan``s over *steps*, which needs the step axis leading.  The
+    seed transposed inside the jitted epoch (``jnp.swapaxes`` per
+    dispatch — a real copy of every rating array, every epoch);
+    ``NomadRingEngine._load_pack`` now pays this transpose exactly once,
+    here, at pack-load time.
+    """
+    return tuple(np.ascontiguousarray(np.swapaxes(np.asarray(a), 0, 1))
+                 for a in arrays)
+
+
 def shard_factors(W: np.ndarray, H: np.ndarray, br: BlockedRatings
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Scatter global (m,k)/(n,k) factors into (p, m_local, k)/(p, n_local, k)

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class PowerSchedule:
@@ -21,6 +23,21 @@ class PowerSchedule:
 
     def __call__(self, t) -> float:
         return self.alpha / (1.0 + self.beta * (t ** 1.5))
+
+    def values(self, start: int, count: int) -> np.ndarray:
+        """Step sizes for epochs ``start .. start + count - 1`` as one
+        float64 array — the whole-run evaluation the fused training
+        driver precomputes on the host.
+
+        Each entry is ``self(t)`` for the integer epoch index, evaluated
+        exactly as the per-epoch loop path evaluates it, so the fused
+        driver's learning-rate array is bitwise-identical to the loop
+        path by construction (no re-derivation of the power law in
+        vectorized float arithmetic, whose ``pow`` could round
+        differently).
+        """
+        return np.asarray([self(start + i) for i in range(int(count))],
+                          dtype=np.float64)
 
 
 @dataclasses.dataclass

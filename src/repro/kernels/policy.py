@@ -98,16 +98,27 @@ class KernelPolicy:
                 f"packed with sub_blocks={br.sub_blocks}; call "
                 "partition.pack(..., sub_blocks=...) to match")
 
-    def cell_arrays(self, br, *, pipelined: bool):
+    def cell_arrays(self, br, *, pipelined: bool, step_major: bool = False):
         """Select the rating arrays this policy consumes from a packed
         ``BlockedRatings``: the pre-partitioned per-sub-block lists when
         the pipelined SPMD path is active, the wave layout for wave
         impls, the flat sequential lists otherwise (sub-block pipelining
         only exists on the SPMD path; the local emulator runs whole
-        cells, matching seed behaviour)."""
+        cells, matching seed behaviour).
+
+        ``step_major=True`` returns contiguous ``[step, worker, ...]``
+        transposes (``partition.step_major_cells``) — the layout the
+        local executor's scan consumes, paid once here instead of a
+        ``jnp.swapaxes`` copy inside every epoch dispatch."""
         self.check_packed(br, pipelined=pipelined)
         if pipelined and self.sub_blocks > 1:
-            return br.sub_rows, br.sub_cols, br.sub_vals, br.sub_mask
-        if self.wave:
-            return br.wave_rows, br.wave_cols, br.wave_vals, br.wave_mask
-        return br.rows, br.cols, br.vals, br.mask
+            arrays = br.sub_rows, br.sub_cols, br.sub_vals, br.sub_mask
+        elif self.wave:
+            arrays = (br.wave_rows, br.wave_cols, br.wave_vals,
+                      br.wave_mask)
+        else:
+            arrays = br.rows, br.cols, br.vals, br.mask
+        if step_major:
+            from ..core.partition import step_major_cells
+            arrays = step_major_cells(arrays)
+        return arrays

@@ -113,3 +113,11 @@ SIM_TOPOLOGY = dict(p=st.integers(2, 6), seed=st.integers(0, 10_000),
 SCHEDULES = dict(seed=st.integers(0, 10_000), p=st.integers(1, 6),
                  spec=st.sampled_from(["ring", "random", "balanced",
                                        "drawn"]))
+
+#: fused-vs-loop dispatch equivalence grid (DESIGN.md §9): kernel x
+#: schedule x trace cadence x program-block size
+DISPATCH = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
+                impl=st.sampled_from(["xla", "wave"]),
+                spec=st.sampled_from(["ring", "random", "balanced"]),
+                record_every=st.integers(1, 3),
+                fuse_epochs=st.sampled_from([None, 1, 2, 3]))

@@ -97,6 +97,38 @@ def test_fit_result_roundtrip_and_bitwise_resume(tmp_path, tiny_mc_problem):
     np.testing.assert_array_equal(resumed.H, full.H)
 
 
+def test_fit_result_roundtrip_dispatch_fields(tmp_path, tiny_mc_problem):
+    """The fused-driver config fields (dispatch / fuse_epochs /
+    record_every) survive the checkpoint, and a restored loop-dispatch
+    run resumes bitwise under the fused driver (block boundaries are
+    exact resume points)."""
+    from repro import api
+    from repro.core.stepsize import PowerSchedule
+
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                            n=pr["n"], test=pr["test"])
+    cfg = api.NomadConfig(k=pr["k"], p=4, epochs=2, kernel="wave",
+                          dispatch="loop", fuse_epochs=2, record_every=2,
+                          stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+    half = api.solve(problem, cfg)
+    save_fit_result(str(tmp_path), 0, half)
+    restored, _ = restore_fit_result(str(tmp_path))
+    assert restored.config == cfg
+    assert restored.config.dispatch == "loop"
+    assert restored.config.fuse_epochs == 2
+    assert restored.config.record_every == 2
+
+    full = api.solve(problem, dataclasses.replace(
+        cfg, epochs=4, dispatch="fused", record_every=1))
+    resumed = api.solve(problem, dataclasses.replace(
+        restored.config, dispatch="fused", record_every=1),
+        warm_start=restored)
+    np.testing.assert_array_equal(resumed.W, full.W)
+    np.testing.assert_array_equal(resumed.H, full.H)
+
+
 def test_fit_result_roundtrip_emitted_schedule(tmp_path, tiny_mc_problem):
     """A simulator run's replayable extras['schedule'] survives the
     checkpoint (so a restart can still replay the predicted routing)."""

@@ -169,6 +169,53 @@ def test_spmd_general_schedule_matches_local():
     """, n_dev=4)
 
 
+def test_spmd_fused_dispatch_bitwise_matches_loop():
+    """The fused SPMD driver (shard_mapped epoch inside a jitted scan
+    over epochs, donated factor shards, on-device trace) must reproduce
+    the per-epoch loop dispatch bit for bit — W, H and trace — across
+    kernels and schedules (DESIGN.md §9)."""
+    run_sub("""
+        import dataclasses
+        from repro import api
+        from repro.core.stepsize import PowerSchedule
+        from repro.launch.mesh import make_mc_mesh
+        rng = np.random.default_rng(3)
+        m, n, p = 48, 24, 4
+        nnz = 400
+        rows = rng.integers(0, m, nnz); cols = rng.integers(0, n, nnz)
+        vals = rng.normal(size=nnz)
+        test = (rng.integers(0, m, 40), rng.integers(0, n, 40),
+                rng.normal(size=40))
+        problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=m,
+                                n=n, test=test)
+        mesh = make_mc_mesh(p)
+        for impl in ("xla", "wave"):
+            for spec in ("ring", "random", "balanced"):
+                cfg = api.NomadConfig(
+                    k=4, lam=0.01, epochs=3, p=p, kernel=impl,
+                    schedule=spec, schedule_seed=2,
+                    stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+                loop = api.solve(problem, dataclasses.replace(
+                    cfg, dispatch="loop"), mesh=mesh)
+                fused = api.solve(problem, cfg, mesh=mesh)
+                assert np.array_equal(loop.W, fused.W), (impl, spec)
+                assert np.array_equal(loop.H, fused.H), (impl, spec)
+                assert loop.trace == fused.trace, (impl, spec)
+        # the pipelined sub-block path shares the fused driver too
+        cfg = api.NomadConfig(k=4, lam=0.01, epochs=2, p=p,
+                              kernel="xla", sub_blocks=2,
+                              stepsize=PowerSchedule(alpha=0.05,
+                                                     beta=0.02))
+        loop = api.solve(problem, dataclasses.replace(cfg,
+                                                      dispatch="loop"),
+                         mesh=mesh)
+        fused = api.solve(problem, cfg, mesh=mesh)
+        assert np.array_equal(loop.W, fused.W)
+        assert loop.trace == fused.trace
+        print("spmd fused == spmd loop, bitwise")
+    """, n_dev=4)
+
+
 def test_shard_map_moe_matches_local():
     run_sub("""
         import dataclasses

@@ -234,7 +234,10 @@ def test_ring_engine_bitwise_matches_pre_ir_roll_epoch(tiny_mc_problem,
                                 stepsize=PowerSchedule(alpha=0.02,
                                                        beta=0.0))
     eng.init_factors(W0, H0)
-    Ws0, Hs0 = eng.Ws, eng.Hs
+    # run_epoch donates the factor shards (DESIGN.md §9) — snapshot the
+    # initial state before training or the buffers are invalidated
+    Ws0 = jnp.asarray(np.array(eng.Ws))
+    Hs0 = jnp.asarray(np.array(eng.Hs))
     data = eng.policy.cell_arrays(br, pipelined=False)
     data = tuple(jnp.asarray(a) for a in data)
     eng.run_epoch()
