@@ -1,0 +1,143 @@
+"""Elastic fault-tolerance costs (DESIGN.md §10): what does losing —
+or gaining — a worker actually cost?
+
+The paper's robustness argument is architectural: decentralized
+ownership transfer means a failure migrates only the dead worker's shard
+and blocks, never the whole matrix.  These rows measure that claim on
+the live engine and record it under ``elastic/`` in
+``BENCH_kernels.json``:
+
+* ``elastic/repack_{spread}`` — incremental ``repack_transition`` wall
+  time for a one-worker kill at p=8, against the from-scratch pack of
+  the same layout.  ``spread="minimal"`` concentrates the orphaned
+  shards on single donors so most cells copy verbatim; the derived
+  fields carry the moved-row fraction and the speedup over scratch —
+  the repack-cost-scales-with-moved-blocks evidence.
+* ``elastic/recover_kill`` — end-to-end ``StreamingSession.kill``
+  recovery (checkpoint restore, structural + training replay, shard
+  migration), with the post-failure training throughput in the derived
+  fields: the engine keeps running at full rate on the survivors.
+* ``elastic/chaos_gauntlet`` — a :func:`~repro.runtime.chaos.seeded_script`
+  of kills, departures, joins and slowdowns driven through
+  :class:`~repro.runtime.chaos.ChaosHarness`; the row is total recovery
+  time across the script, with the per-event mean and final worker
+  count derived.
+
+Set ``NOMAD_BENCH_SMOKE=1`` (CI) to shrink the gauntlet.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import partition
+from repro.core.schedule import compile_transition
+from repro.core.stepsize import PowerSchedule
+from repro.runtime.chaos import ChaosHarness, seeded_script
+
+from .common import small_netflix
+
+_SMOKE = bool(os.environ.get("NOMAD_BENCH_SMOKE"))
+_P, _K = 8, 8
+_ROUNDS = 4 if _SMOKE else 10
+
+
+def _problem():
+    pr = small_netflix(k=_K)
+    return api.MCProblem(rows=pr["train"][0], cols=pr["train"][1],
+                         vals=pr["train"][2], m=pr["m"], n=pr["n"],
+                         test=pr["test"])
+
+
+def _cfg(p=_P, epochs=1):
+    return api.NomadConfig(k=_K, p=p, lam=0.01, epochs=epochs, seed=0,
+                           stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+
+
+def _repack_rows(out: list) -> None:
+    problem = _problem()
+    rows, cols, vals = problem.rows, problem.cols, problem.vals
+    br = partition.pack(rows, cols, vals, problem.m, problem.n, _P)
+    alive = np.ones(_P, dtype=bool)
+    alive[3] = False
+    for spread in ("balance", "minimal"):
+        tr = compile_transition(
+            _P, br.row_owner, br.col_block, alive=alive,
+            row_weights=np.bincount(rows, minlength=problem.m),
+            col_weights=np.bincount(cols, minlength=problem.n),
+            spread=spread)
+        t0 = time.perf_counter()
+        inc = partition.repack_transition(br, rows, cols, vals, tr)
+        t_inc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        partition.pack(rows, cols, vals, problem.m, problem.n, tr.p_new,
+                       row_owner=inc.row_owner, col_block=inc.col_block,
+                       schedule=inc.schedule)
+        t_scratch = time.perf_counter() - t0
+        moved_frac = len(tr.moved_rows) / problem.m
+        out.append((
+            f"elastic/repack_{spread}", t_inc * 1e6,
+            f"moved_row_frac={moved_frac:.3f} "
+            f"moved_cols={len(tr.moved_cols)} "
+            f"transfer_steps={len(tr.transfer_steps())} "
+            f"speedup_vs_scratch={t_scratch / max(t_inc, 1e-9):.2f}"))
+
+
+def _recover_rows(out: list) -> None:
+    problem = _problem()
+    with tempfile.TemporaryDirectory() as d:
+        sess = api.StreamingSession(
+            problem, _cfg(),
+            faults=api.FaultPolicy(checkpoint_dir=d, checkpoint_every=1))
+        sess.fit()                               # one round + checkpoint
+        t0 = time.perf_counter()
+        tr = sess.kill(3)
+        recovery = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = sess.fit()
+        t_epoch = time.perf_counter() - t0
+        ups = problem.nnz / max(t_epoch, 1e-9)
+        out.append((
+            "elastic/recover_kill", recovery * 1e6,
+            f"p={tr.p_old}->{tr.p_new} "
+            f"moved_row_frac={len(tr.moved_rows) / problem.m:.3f} "
+            f"post_failure_updates_per_s={ups:.0f} "
+            f"rmse={float(res.trace_rmse[-1]):.4f}"))
+
+
+def _gauntlet_rows(out: list) -> None:
+    problem = _problem()
+    events = seeded_script(7, _ROUNDS, _P, p_max=_P + 2)
+    with tempfile.TemporaryDirectory() as d:
+        sess = api.StreamingSession(
+            problem, _cfg(),
+            faults=api.FaultPolicy(checkpoint_dir=d, monitor=True))
+        sess.fit()
+        t0 = time.perf_counter()
+        rep = ChaosHarness(sess, events, seed=1).run()
+        wall = time.perf_counter() - t0
+        n_rec = max(len(rep.recoveries), 1)
+        ups = problem.nnz * rep.rounds / max(wall, 1e-9)
+        out.append((
+            "elastic/chaos_gauntlet", rep.total_recovery_s * 1e6,
+            f"rounds={rep.rounds} recoveries={len(rep.recoveries)} "
+            f"mean_recovery_us={rep.total_recovery_s * 1e6 / n_rec:.0f} "
+            f"p_final={rep.p_final} updates_per_s={ups:.0f} "
+            f"rmse={rep.rmse[-1]:.4f}"))
+
+
+def elastic_rows():
+    out: list = []
+    _repack_rows(out)
+    _recover_rows(out)
+    _gauntlet_rows(out)
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in elastic_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -93,7 +93,8 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
-    from . import driver_bench, schedule_bench, stream_bench
+    from . import driver_bench, elastic_bench, schedule_bench, \
+        stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -111,6 +112,7 @@ def main() -> None:
         ("stream", stream_bench.stream_rows),
         ("schedule", schedule_bench.schedule_rows),
         ("driver", driver_bench.driver_rows),
+        ("elastic", elastic_bench.elastic_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -124,7 +126,7 @@ def main() -> None:
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
             if name in ("kernel", "solver", "stream", "schedule",
-                        "driver"):
+                        "driver", "elastic"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -1,0 +1,109 @@
+"""Elastic matrix completion: survive worker churn mid-run.
+
+A live ``StreamingSession`` trains while workers join, leave, and die.
+Departures and joins compile to a ``TransitionSchedule`` — surviving
+shards are bitwise-untouched, only the orphaned/donated shards move, in
+conflict-free transfer rounds.  A *kill* additionally exercises the
+recovery path: restore the last committed checkpoint, replay the logged
+rounds, then migrate — landing bitwise on the state a graceful
+departure reaches (tests/test_elastic.py, ``-m chaos``).
+
+Two modes:
+
+* default — a hand-scripted lifecycle (fit / leave / join / kill) with
+  per-event migration stats printed;
+* ``--chaos`` — a seeded gauntlet from ``runtime/chaos.py``: random
+  kills, departures, joins and slowdowns, with a straggler monitor
+  watching virtual step timings.
+
+    pip install -e .           # once, from the repo root
+    python examples/elastic_mc.py
+    python examples/elastic_mc.py --chaos --rounds 10
+"""
+import argparse
+import tempfile
+
+from repro import api
+from repro.core.stepsize import PowerSchedule
+
+
+def _report(label, tr, res):
+    print(f"  {label:<18} p={tr.p_old}->{tr.p_new}  "
+          f"moved_rows={len(tr.moved_rows):<5d} "
+          f"moved_cols={len(tr.moved_cols):<4d} "
+          f"transfer_rounds={len(tr.transfer_steps()):<3d} "
+          f"rmse={float(res.trace_rmse[-1]):.4f}")
+
+
+def scripted(sess, epochs):
+    print("scripted lifecycle (p=4):")
+    res = sess.fit(epochs=epochs)
+    print(f"  cold start         rmse={float(res.trace_rmse[-1]):.4f}")
+
+    tr = sess.resize(leave=(1,))
+    _report("leave worker 1", tr, sess.fit(epochs=epochs))
+
+    tr = sess.resize(join=2)
+    _report("2 workers join", tr, sess.fit(epochs=epochs))
+
+    tr = sess.kill(0)            # crash + checkpoint recovery
+    _report("KILL worker 0", tr, sess.fit(epochs=epochs))
+
+    tr = sess.resize(p_new=4, spread="minimal")
+    _report("resize to p=4", tr, sess.fit(epochs=epochs))
+    print(f"final: p={sess.config.p}, "
+          f"epochs_done={sess.result.epochs_done:g}")
+
+
+def chaos(sess, rounds, epochs):
+    from repro.runtime.chaos import ChaosHarness, seeded_script
+    events = seeded_script(7, rounds, sess.config.p)
+    print(f"chaos gauntlet: {rounds} rounds, {len(events)} events")
+    for ev in events:
+        print(f"  round {ev.round:>2}: {ev.action}"
+              + (f" worker {ev.worker}" if ev.worker >= 0 else ""))
+    rep = ChaosHarness(sess, events, epochs_per_round=epochs).run()
+    for rec in rep.recoveries:
+        print(f"  round {rec.round:>2}: {rec.action:<5} "
+              f"p={rec.p_before}->{rec.p_after}  "
+              f"recovery={rec.recovery_s * 1e3:.1f}ms  "
+              f"moved_rows={rec.moved_rows}")
+    print(f"survived: p_final={rep.p_final}, "
+          f"total_recovery={rep.total_recovery_s * 1e3:.1f}ms, "
+          f"rmse {rep.rmse[0]:.4f} -> {rep.rmse[-1]:.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=1000)
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--nnz", type=int, default=40_000)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--p", type=int, default=4, help="initial workers")
+    ap.add_argument("--epochs", type=int, default=2,
+                    help="epochs per round")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded chaos gauntlet instead of the script")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="gauntlet rounds (with --chaos)")
+    args = ap.parse_args()
+
+    problem = api.MCProblem.synthetic(args.m, args.n, args.nnz,
+                                      k=args.k, seed=0)
+    config = api.NomadConfig(
+        k=args.k, p=args.p, lam=0.01, epochs=args.epochs, seed=0,
+        stepsize=PowerSchedule(alpha=0.05, beta=0.02))
+    with tempfile.TemporaryDirectory() as ckpt:
+        sess = api.StreamingSession(
+            problem, config,
+            faults=api.FaultPolicy(checkpoint_dir=ckpt,
+                                   checkpoint_every=1,
+                                   monitor=args.chaos))
+        if args.chaos:
+            chaos(sess, args.rounds, args.epochs)
+        else:
+            scripted(sess, args.epochs)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Type, Union
 import numpy as np
 
 from .core import partition as part
-from .core.schedule import OwnershipSchedule, SCHEDULE_NAMES
+from .core.schedule import (OwnershipSchedule, SCHEDULE_NAMES,
+                            TransitionSchedule, compile_transition)
 from .core.stepsize import PowerSchedule
 from .kernels.policy import KernelPolicy
 
@@ -49,6 +50,7 @@ __all__ = [
     "MCProblem", "ProblemDelta", "SolverConfig", "NomadConfig",
     "DsgdConfig", "CcdConfig", "AlsConfig", "HogwildConfig",
     "AsyncSimConfig", "FitResult", "KernelPolicy", "OwnershipSchedule",
+    "TransitionSchedule", "FaultPolicy",
     "solve", "register_solver", "solver_names", "config_for",
     "partial_fit", "register_partial_fit", "supports_partial_fit",
     "streaming_solver_names", "StreamingSession",
@@ -534,6 +536,11 @@ class AsyncSimConfig(SolverConfig):
     load_balance: bool = False
     speed: Optional[Tuple[float, ...]] = None
     failures: Tuple[Tuple[float, int], ...] = ()
+    #: worker rejoin events ``((virtual_time, worker), ...)`` — the dual
+    #: of ``failures``: a previously-failed worker comes back, steals a
+    #: balanced share of rows, and re-enters the routing pool (the full
+    #: elastic lifecycle; NOMAD mode only)
+    rejoins: Tuple[Tuple[float, int], ...] = ()
     record_every: float = 0.5
     #: rating-arrival events ``((virtual_time, (rating ids...)), ...)``:
     #: the listed training ratings stay invisible until their batch's
@@ -562,6 +569,18 @@ class AsyncSimConfig(SolverConfig):
             if len(self.speed) != self.p:
                 raise ValueError(
                     f"speed has {len(self.speed)} entries for p={self.p}")
+        if self.rejoins:
+            if self.mode != "nomad":
+                raise ValueError(
+                    "rejoins are only simulated for mode='nomad' (the "
+                    "bulk-synchronous baselines have no elastic "
+                    "lifecycle)")
+            object.__setattr__(self, "rejoins", tuple(
+                (float(t), int(q)) for t, q in self.rejoins))
+            if any(t < 0 for t, _ in self.rejoins):
+                raise ValueError("rejoin times must be >= 0")
+            if any(q < 0 or q >= self.p for _, q in self.rejoins):
+                raise ValueError(f"rejoin workers must lie in [0, {self.p})")
         if self.arrivals:
             if self.mode != "nomad":
                 raise ValueError(
@@ -581,8 +600,57 @@ class AsyncSimConfig(SolverConfig):
             epochs=float(self.epochs), load_balance=self.load_balance,
             speed=(None if self.speed is None
                    else np.asarray(self.speed, dtype=np.float64)),
-            failures=self.failures, seed=self.seed,
+            failures=self.failures, rejoins=self.rejoins, seed=self.seed,
             record_every=self.record_every, arrivals=self.arrivals)
+
+
+# ---------------------------------------------------------------------- #
+# Fault tolerance policy                                                  #
+# ---------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How a run survives worker failures (DESIGN.md §10).
+
+    Passed as ``solve(..., faults=)`` — chunk the run into
+    ``checkpoint_every``-epoch blocks, atomically checkpoint after each,
+    and transparently resume from the last committed block after a crash
+    (bitwise-identical to the uninterrupted run: fused block boundaries
+    are exact resume points) — or as ``StreamingSession(..., faults=)``,
+    where it additionally enables :meth:`StreamingSession.kill` (recover
+    dead workers from the last checkpoint + round replay) and the
+    live straggler policy (:meth:`StreamingSession.observe_step_times`).
+    """
+    #: checkpoint directory (created on first save)
+    checkpoint_dir: str
+    #: epochs (``solve``) / session rounds between checkpoints
+    checkpoint_every: int = 1
+    #: committed checkpoints retained (older ones are GC'd)
+    keep: int = 3
+    #: resume from the latest committed checkpoint when one exists
+    resume: bool = True
+    #: feed ``observe_step_times`` into a :class:`StragglerMonitor`
+    monitor: bool = False
+    #: monitor flag threshold (x median EWMA step time)
+    threshold: float = 1.5
+    #: gracefully resize flagged stragglers out of the cluster
+    eject: bool = False
+    #: re-route the ownership schedule by live speed estimates
+    #: (``OwnershipSchedule.balanced`` weighted by 1/speed)
+    adapt_schedule: bool = False
+
+    def __post_init__(self):
+        if not self.checkpoint_dir:
+            raise ValueError("FaultPolicy requires a checkpoint_dir")
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got "
+                f"{self.checkpoint_every}")
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
+        if self.threshold <= 1.0:
+            raise ValueError(
+                f"threshold must be > 1 (x median), got {self.threshold}")
 
 
 # ---------------------------------------------------------------------- #
@@ -668,16 +736,29 @@ def config_for(name: str) -> Type[SolverConfig]:
 
 def solve(problem: MCProblem, config: SolverConfig, *, mesh=None,
           warm_start: Optional[FitResult] = None,
-          verbose: bool = False) -> FitResult:
+          verbose: bool = False,
+          faults: Optional[FaultPolicy] = None) -> FitResult:
     """Run the solver registered for ``type(config)`` on ``problem``.
 
     ``mesh``       — optional device mesh; solvers that support SPMD
                      execution (NOMAD) shard over its first axis.
     ``warm_start`` — a previous :class:`FitResult` to resume from.
+    ``faults``     — a :class:`FaultPolicy`: run in checkpointed blocks
+                     and resume from the last committed block after a
+                     crash, bitwise-identical to the uninterrupted run.
     """
     if not isinstance(problem, MCProblem):
         raise TypeError(f"problem must be MCProblem, got "
                         f"{type(problem).__name__}")
+    if faults is not None:
+        if not isinstance(faults, FaultPolicy):
+            raise TypeError(f"faults must be FaultPolicy, got "
+                            f"{type(faults).__name__}")
+        t0 = time.perf_counter()
+        result = _solve_faulted(problem, config, mesh=mesh,
+                                warm_start=warm_start, verbose=verbose,
+                                faults=faults)
+        return _finalize(result, config, t0)
     entry = None
     for cls in type(config).__mro__:
         if cls in _SOLVERS:
@@ -714,6 +795,63 @@ def _warm_factors(warm_start: Optional[FitResult], dtype=None):
     W0 = np.asarray(warm_start.W, dtype=dtype)
     H0 = np.asarray(warm_start.H, dtype=dtype)
     return W0, H0, warm_start.epochs_done
+
+
+def _solve_faulted(problem: MCProblem, config: SolverConfig, *, mesh,
+                   warm_start, verbose,
+                   faults: FaultPolicy) -> FitResult:
+    """Fault-tolerant ``solve``: run in ``checkpoint_every``-epoch
+    blocks, atomically checkpoint the accumulated result after each, and
+    (``resume=True``) pick up from the latest committed block.  Split
+    runs warm-start bitwise-exactly (asserted in tests/test_checkpoint
+    and tests/test_driver), so the recovered run equals the
+    uninterrupted one in W, H and trace."""
+    from .checkpoint.checkpoint import (gc_checkpoints, restore_fit_result,
+                                        save_fit_result)
+    total = config.epochs
+    if total != int(total):
+        raise ValueError(
+            f"faults= requires integral epochs, got {total} (the "
+            "simulator has its own failure model: AsyncSimConfig.failures)")
+    total = int(total)
+    if total == 0:
+        return solve(problem, config, mesh=mesh, warm_start=warm_start,
+                     verbose=verbose)
+    base = warm_start.epochs_done if warm_start is not None else 0
+    warm, done, traces = warm_start, 0, []
+    if faults.resume:
+        restored, _step = restore_fit_result(faults.checkpoint_dir)
+        if restored is not None:
+            if restored.config is not None and dataclasses.replace(
+                    restored.config, epochs=config.epochs) != config:
+                raise ValueError(
+                    f"checkpoint in {faults.checkpoint_dir!r} was written "
+                    f"by a different config ({restored.config!r}); refuse "
+                    "to resume a run it does not belong to")
+            done = int(round(restored.epochs_done - base))
+            if done < 0 or done > total:
+                raise ValueError(
+                    f"checkpoint has {restored.epochs_done} epochs done "
+                    f"but this run spans [{base}, {base + total}]")
+            warm = restored
+            traces.append((restored.trace_epochs, restored.trace_rmse))
+    res = warm
+    while done < total:
+        chunk = min(faults.checkpoint_every, total - done)
+        res = solve(problem, dataclasses.replace(config, epochs=chunk),
+                    mesh=mesh, warm_start=warm, verbose=verbose)
+        done += chunk
+        traces.append((res.trace_epochs, res.trace_rmse))
+        # the running checkpoint carries the *accumulated* trace so a
+        # resumed run's history is the uninterrupted run's history
+        res = dataclasses.replace(
+            res,
+            trace_epochs=np.concatenate([t for t, _ in traces]),
+            trace_rmse=np.concatenate([r for _, r in traces]))
+        save_fit_result(faults.checkpoint_dir, done, res)
+        gc_checkpoints(faults.checkpoint_dir, faults.keep)
+        warm = res
+    return res
 
 
 # ---------------------------------------------------------------------- #
@@ -1085,10 +1223,19 @@ class StreamingSession:
     is bitwise-identical to ``partial_fit`` calls (and to warm-started
     batch refits) without rebuilding the engine or re-coloring untouched
     cells.  Other streaming solvers route through :func:`partial_fit`.
+
+    The session is also the *elastic* front door (DESIGN.md §10):
+    :meth:`resize` changes the worker set mid-run (workers leave or
+    join; surviving shards migrate bitwise-untouched along a compiled
+    :class:`TransitionSchedule`), and — with a :class:`FaultPolicy` —
+    :meth:`kill` recovers dead workers from the last committed
+    checkpoint plus a deterministic round replay, landing bitwise on the
+    state a graceful :meth:`resize` of the same workers reaches.
     """
 
     def __init__(self, problem: MCProblem, config: SolverConfig, *,
-                 mesh=None, verbose: bool = False):
+                 mesh=None, verbose: bool = False,
+                 faults: Optional[FaultPolicy] = None):
         if not isinstance(problem, MCProblem):
             raise TypeError(f"problem must be MCProblem, got "
                             f"{type(problem).__name__}")
@@ -1096,13 +1243,32 @@ class StreamingSession:
             raise NotImplementedError(
                 f"{type(config).__name__} does not support streaming; "
                 f"streaming solvers: {streaming_solver_names()}")
+        if faults is not None and not isinstance(faults, FaultPolicy):
+            raise TypeError(f"faults must be FaultPolicy, got "
+                            f"{type(faults).__name__}")
         self.problem = problem
         self.config = config
         self.mesh = mesh
         self.verbose = verbose
+        self.faults = faults
         self.result: Optional[FitResult] = None
         self.history: List[FitResult] = []
         self._eng = None
+        # elastic state: the base problem/config every kill-recovery
+        # replays from, the round log (one op per public mutating call),
+        # and the original schedule *spec* (re-resolved per worker set)
+        self._base_problem = problem
+        self._base_config = config
+        self._replay_log: List[tuple] = []
+        self._replaying = False
+        self._schedule_spec = (config.schedule
+                               if isinstance(config, NomadConfig) else None)
+        self._monitor = None
+        if faults is not None and faults.monitor \
+                and isinstance(config, NomadConfig):
+            from .runtime.straggler import StragglerMonitor
+            self._monitor = StragglerMonitor(config.p,
+                                             threshold=faults.threshold)
 
     def _cfg(self, epochs) -> SolverConfig:
         return self.config if epochs is None else dataclasses.replace(
@@ -1115,22 +1281,36 @@ class StreamingSession:
         self.history.append(res)
         return res
 
+    def _ensure_engine(self):
+        if self._eng is None:
+            self._eng, _ = _nomad_cold_start(self.problem, self.config,
+                                             self.mesh, self.result)
+        return self._eng
+
+    def _require_nomad(self, what: str) -> NomadConfig:
+        if not isinstance(self.config, NomadConfig):
+            raise NotImplementedError(
+                f"{what} requires a NomadConfig session (ownership "
+                "transfer is what makes the engine elastic); got "
+                f"{type(self.config).__name__}")
+        return self.config
+
     def fit(self, epochs=None) -> FitResult:
         """Run ``epochs`` (default ``config.epochs``) on the current data
         — the cold start, or further refinement between arrivals."""
         cfg = self._cfg(epochs)
         t0 = time.perf_counter()
         if isinstance(cfg, NomadConfig):
-            if self._eng is None:
-                self._eng, _ = _nomad_cold_start(self.problem, cfg,
-                                                 self.mesh, self.result)
+            self._ensure_engine()
             start = 0 if self.result is None else self.result.epochs_done
             res = _nomad_run(self._eng, cfg, self.problem.test, start,
                              self.verbose)
         else:
             res = solve(self.problem, cfg, mesh=self.mesh,
                         warm_start=self.result, verbose=self.verbose)
-        return self._finish(res, t0, cfg)
+        res = self._finish(res, t0, cfg)
+        self._after_round(("fit", epochs))
+        return res
 
     def arrive(self, rows=(), cols=(), vals=(), *, m_new: int = 0,
                n_new: int = 0, test=None, epochs=None) -> FitResult:
@@ -1155,4 +1335,273 @@ class StreamingSession:
             res = partial_fit(self.result, delta, cfg, mesh=self.mesh,
                               verbose=self.verbose)
             self.problem = delta.extended()
-        return self._finish(res, t0, cfg)
+        res = self._finish(res, t0, cfg)
+        self._after_round(("arrive", rows, cols, vals, m_new, n_new,
+                           test, epochs))
+        return res
+
+    # ----------------------------------------------------------------- #
+    # Elasticity: resize / kill / straggler policy                       #
+    # ----------------------------------------------------------------- #
+
+    def resize(self, p_new: Optional[int] = None, *, leave=(), join: int = 0,
+               mesh="keep", spread: str = "balance") -> TransitionSchedule:
+        """Change the worker set mid-run: ``leave`` (graceful departures,
+        old worker ids), ``join`` (new workers appended), or just a
+        target ``p_new`` (shrinks drop the highest-numbered workers).
+
+        Compiles a :class:`TransitionSchedule` weighted by per-row /
+        per-column rating counts, re-packs along it (cells whose
+        endpoints survive untouched are copied verbatim —
+        ``partition.repack_transition``), and migrates the engine:
+        surviving factor shards are preserved bit for bit and the
+        step-size schedule continues, so the run's history stays exactly
+        serializable across the transition.  ``spread="minimal"``
+        concentrates moved shards on single donors/targets (fewest cells
+        touched — fastest recovery) instead of load-spreading them.
+        Returns the compiled transition (``transfers()`` is the
+        migration plan)."""
+        cfg = self._require_nomad("resize()")
+        p = cfg.p
+        leave = tuple(int(q) for q in np.atleast_1d(
+            np.asarray(leave, dtype=np.int64)).tolist())
+        join = int(join)
+        if p_new is not None:
+            if leave or join:
+                raise ValueError("pass p_new= or leave=/join=, not both")
+            if p_new < 1:
+                raise ValueError(f"p_new must be >= 1, got {p_new}")
+            if p_new < p:
+                leave = tuple(range(p_new, p))
+            else:
+                join = p_new - p
+        if any(q < 0 or q >= p for q in leave):
+            raise ValueError(f"leave workers must lie in [0, {p})")
+        if len(set(leave)) >= p:
+            raise RuntimeError("no survivors")
+        eng = self._ensure_engine()
+        alive = np.ones(p, dtype=bool)
+        alive[list(leave)] = False
+        tr = compile_transition(
+            p, eng.br.row_owner, eng.br.col_block, alive=alive, join=join,
+            row_weights=np.bincount(self.problem.rows, minlength=self.problem.m),
+            col_weights=np.bincount(self.problem.cols, minlength=self.problem.n),
+            spread=spread)
+        self._apply_transition(tr, mesh=mesh)
+        self._after_round(("resize", leave, join, spread, mesh))
+        return tr
+
+    def kill(self, *workers: int, mesh="keep") -> TransitionSchedule:
+        """Worker failure: the listed workers died without handing off
+        their shards.  Recovery restores the last committed checkpoint
+        (``faults.checkpoint_dir``; cold replay from the base data when
+        none exists), deterministically replays the rounds after it, and
+        resizes the dead workers out — landing bitwise on the state a
+        graceful ``resize(leave=workers)`` reaches, which is what makes
+        the recovered history exactly serializable."""
+        self._require_nomad("kill()")
+        if not workers:
+            raise ValueError("kill() needs at least one worker id")
+        restored, step = None, 0
+        if self.faults is not None:
+            from .checkpoint.checkpoint import restore_fit_result
+            restored, step = restore_fit_result(self.faults.checkpoint_dir)
+            if restored is None:
+                step = 0
+        log = self._replay_log
+        if step > len(log):
+            raise ValueError(
+                f"checkpoint is at round {step} but the session only "
+                f"logged {len(log)} rounds")
+        self.problem = self._base_problem
+        self.config = self._base_config
+        self._schedule_spec = self._base_config.schedule
+        self.result = None
+        self.history = []
+        self._eng = None
+        self._replay_log = []
+        self._replaying = True
+        try:
+            for op in log[:step]:
+                self._apply_op(op, structural=True)
+            if restored is not None:
+                # the structural replay has rebuilt the session config as
+                # of the checkpointed round — now it can vouch for the
+                # checkpoint (modulo the per-round epochs override)
+                if restored.config is not None and dataclasses.replace(
+                        restored.config,
+                        epochs=self.config.epochs) != self.config:
+                    raise ValueError(
+                        f"checkpoint in {self.faults.checkpoint_dir!r} "
+                        "was written by a different run; refuse to "
+                        "recover from it")
+                eng = self._ensure_engine()
+                eng.init_factors(
+                    np.asarray(restored.W, dtype=self.problem.dtype),
+                    np.asarray(restored.H, dtype=self.problem.dtype))
+                self.result = restored
+            for op in log[step:]:
+                self._apply_op(op)
+        finally:
+            self._replaying = False
+        return self.resize(leave=workers, mesh=mesh)
+
+    def _apply_op(self, op: tuple, structural: bool = False):
+        """Re-execute one logged round.  ``structural`` replays only the
+        layout/worker-set evolution (no training) — used for the rounds
+        a restored checkpoint already covers, whose factors come from
+        the checkpoint instead."""
+        kind = op[0]
+        if kind == "fit":
+            if structural:
+                self._ensure_engine()
+            else:
+                self.fit(epochs=op[1])
+        elif kind == "arrive":
+            _, rows, cols, vals, m_new, n_new, test, epochs = op
+            if structural:
+                eng = self._ensure_engine()
+                cfg = self.config
+                delta = self.problem.extend(rows, cols, vals, m_new=m_new,
+                                            n_new=n_new, test=test)
+                br = _streaming_repack(eng.br, self.problem, delta, cfg)
+                eng.grow(br, seed=cfg.seed)
+                self.problem = _sticky_extended_problem(delta, br, cfg)
+            else:
+                self.arrive(rows, cols, vals, m_new=m_new, n_new=n_new,
+                            test=test, epochs=epochs)
+        elif kind == "resize":
+            _, leave, join, spread, mesh = op
+            self.resize(leave=leave, join=join, spread=spread, mesh=mesh)
+        elif kind == "adapt":
+            self._adapt_schedule(np.asarray(op[1], dtype=np.float64))
+        else:
+            raise ValueError(f"unknown replay op {kind!r}")
+        if self._replaying:
+            self._replay_log.append(op)
+
+    def _apply_transition(self, tr: TransitionSchedule, *, mesh="keep",
+                          schedule: Optional[OwnershipSchedule] = None):
+        """Engine half of a worker-set (or schedule) change: re-pack
+        along ``tr``, migrate the engine, and re-pin the session problem
+        to the new sticky assignment."""
+        cfg = self.config
+        eng = self._ensure_engine()
+        if tr.is_identity() and schedule is None:
+            return
+        policy = cfg.kernel
+        # a string spec re-resolves for the new worker set; an explicit
+        # old-p schedule cannot carry over, so fall back to its name
+        spec = schedule if schedule is not None else (
+            self._schedule_spec
+            if isinstance(self._schedule_spec, str) else None)
+        prob = self.problem
+        if policy.sub_blocks == 1:
+            br = part.repack_transition(
+                eng.br, prob.rows, prob.cols, prob.vals, tr,
+                schedule=spec, schedule_seed=cfg.schedule_seed)
+        else:
+            br = part.pack(
+                prob.rows, prob.cols, prob.vals, prob.m, prob.n, tr.p_new,
+                waves=policy.wave, sub_blocks=policy.sub_blocks,
+                row_owner=tr.row_owner.astype(np.int32),
+                col_block=tr.col_block.astype(np.int32),
+                schedule=spec, schedule_seed=cfg.schedule_seed)
+        eng.migrate(br, mesh=mesh)
+        self.config = dataclasses.replace(cfg, p=tr.p_new,
+                                          schedule=br.schedule)
+        self.problem = self._repinned_problem(br)
+        if self._monitor is not None and tr.p_new != tr.p_old:
+            from .runtime.straggler import StragglerMonitor
+            self._monitor = StragglerMonitor(
+                tr.p_new, threshold=self.faults.threshold)
+
+    def _repinned_problem(self, br) -> MCProblem:
+        """The session problem pinned to ``br``'s partition + schedule,
+        pack cache pre-seeded with ``br`` (the resize analogue of
+        ``_sticky_extended_problem``: a batch re-solve of the session's
+        problem replays the identical serial order, cache-hit)."""
+        cfg, old = self.config, self.problem
+        prob = MCProblem(
+            rows=old.rows, cols=old.cols, vals=old.vals, m=old.m, n=old.n,
+            test=old.test, val=old.val, dtype=old.dtype,
+            row_assign=br.row_owner, col_assign=br.col_block,
+            schedule_pin=br.schedule)
+        policy = cfg.kernel
+        prob._pack_cache[MCProblem._pack_key(
+            cfg.p, cfg.balanced, policy.wave, None, policy.sub_blocks,
+            br.schedule, 0)] = br
+        return prob
+
+    def observe_step_times(self, step_times) -> List[int]:
+        """Feed one round of per-worker step timings to the straggler
+        policy (``faults.monitor``).  Returns the flagged workers; with
+        ``faults.eject`` they are gracefully resized out, and with
+        ``faults.adapt_schedule`` the ownership schedule re-routes by
+        the live speed estimates (§3.3's queue-aware routing, fed by
+        measurements instead of static nnz)."""
+        self._require_nomad("observe_step_times()")
+        if self._monitor is None:
+            raise RuntimeError(
+                "straggler monitoring is off; pass "
+                "faults=FaultPolicy(..., monitor=True)")
+        flagged = self._monitor.update(np.asarray(step_times,
+                                                  dtype=np.float64))
+        if flagged and self.faults.eject:
+            self.resize(leave=tuple(flagged))
+            return flagged
+        if self.faults.adapt_schedule \
+                and self._monitor.steps >= self._monitor.min_steps:
+            self._adapt_schedule(self._monitor.speed_estimates())
+        return flagged
+
+    def _adapt_schedule(self, speeds: np.ndarray):
+        """Re-route the ownership schedule for the *current* worker set:
+        ``OwnershipSchedule.balanced`` on per-cell nnz scaled by each
+        worker's inverse speed, applied through the identity transition
+        (no shard moves — only the visit order changes)."""
+        cfg = self._require_nomad("_adapt_schedule()")
+        eng = self._ensure_engine()
+        br = eng.br
+        speeds = np.maximum(np.asarray(speeds, dtype=np.float64), 1e-12)
+        if len(speeds) != br.p:
+            raise ValueError(f"got {len(speeds)} speeds for p={br.p}")
+        prob = self.problem
+        cell = (br.row_owner[prob.rows].astype(np.int64) * br.p
+                + br.col_block[prob.cols])
+        loads = np.bincount(cell, minlength=br.p * br.p).reshape(
+            br.p, br.p) / speeds[:, None]
+        sched = OwnershipSchedule.balanced(br.p, seed=cfg.schedule_seed,
+                                           loads=loads)
+        tr = TransitionSchedule.identity(br.p, br.row_owner, br.col_block)
+        self._apply_transition(tr, schedule=sched)
+        self._after_round(("adapt", tuple(float(s) for s in speeds)))
+
+    # ----------------------------------------------------------------- #
+    # Round log + checkpointing                                          #
+    # ----------------------------------------------------------------- #
+
+    def _after_round(self, op: tuple):
+        if self._replaying:
+            return
+        self._replay_log.append(op)
+        f = self.faults
+        if f is not None and self.result is not None \
+                and len(self._replay_log) % f.checkpoint_every == 0:
+            self.checkpoint()
+
+    def checkpoint(self) -> int:
+        """Atomically checkpoint the current result at the current round
+        (step = rounds completed), GC'ing to ``faults.keep``; returns the
+        step.  Called automatically every ``faults.checkpoint_every``
+        rounds."""
+        if self.faults is None:
+            raise RuntimeError(
+                "no FaultPolicy attached; pass faults= to the session")
+        if self.result is None:
+            raise RuntimeError("nothing to checkpoint yet; call fit()")
+        from .checkpoint.checkpoint import gc_checkpoints, save_fit_result
+        step = len(self._replay_log)
+        save_fit_result(self.faults.checkpoint_dir, step, self.result)
+        gc_checkpoints(self.faults.checkpoint_dir, self.faults.keep)
+        return step

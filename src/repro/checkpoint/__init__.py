@@ -1,5 +1,6 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step, \
-    AsyncCheckpointer, save_fit_result, restore_fit_result
+    AsyncCheckpointer, save_fit_result, restore_fit_result, gc_checkpoints
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer", "save_fit_result", "restore_fit_result"]
+           "AsyncCheckpointer", "save_fit_result", "restore_fit_result",
+           "gc_checkpoints"]

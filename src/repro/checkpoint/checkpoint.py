@@ -85,6 +85,49 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def gc_checkpoints(ckpt_dir: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` *committed* checkpoints (plus
+    any leftover ``.tmp`` write staging older than them).
+
+    Only committed steps count toward ``keep`` and only steps strictly
+    older than the ``keep``-th-newest committed one are removed: a torn
+    step directory from a crash mid-write (no COMMITTED marker) must
+    never push the latest restorable checkpoint out of the window — GC
+    deleting the very checkpoint a crashed run would restore from is
+    the classic way "atomic" checkpointing loses data anyway."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    if not os.path.isdir(ckpt_dir):
+        return
+    committed, torn = [], []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_"):
+            continue
+        base = name[:-4] if name.endswith(".tmp") else name
+        try:
+            step = int(base.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if name.endswith(".tmp"):
+            torn.append((step, name))
+        elif os.path.exists(os.path.join(ckpt_dir, name, "COMMITTED")):
+            committed.append((step, name))
+        else:
+            torn.append((step, name))
+    committed.sort()
+    if not committed:
+        return
+    cutoff = committed[-keep][0] if len(committed) >= keep \
+        else committed[0][0]
+    for step, name in committed[:-keep] if len(committed) > keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+    for step, name in torn:
+        # torn dirs below the retained window are dead weight; newer
+        # ones may be a write in flight — leave them alone
+        if step < cutoff:
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
 def restore_checkpoint(ckpt_dir: str, tree_like: Any,
                        step: Optional[int] = None, shard_id: int = 0):
     """Restore into the structure of ``tree_like`` (shapes must match).
@@ -263,9 +306,4 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
-            if n.startswith("step_") and not n.endswith(".tmp"))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        gc_checkpoints(self.ckpt_dir, self.keep)

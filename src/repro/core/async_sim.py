@@ -51,6 +51,12 @@ class SimConfig:
     load_balance: bool = False    # §3.3 queue-aware routing
     speed: Optional[np.ndarray] = None   # per-worker speed multiplier
     failures: Tuple[Tuple[float, int], ...] = ()  # (time, worker) events
+    #: worker rejoin events, the dual of ``failures``: at (time, worker)
+    #: a previously-failed worker comes back alive, steals a balanced
+    #: share of rows from the most-loaded survivor (stable segment
+    #: splits, so the start-time linearization — and serializability —
+    #: is preserved) and re-enters the routing pool.
+    rejoins: Tuple[Tuple[float, int], ...] = ()
     seed: int = 0
     record_every: float = 0.5     # RMSE trace granularity, in epochs
     #: rating-arrival events: (virtual_time, rating ids) batches.  Listed
@@ -183,8 +189,12 @@ class NomadSimulator:
             seq += 1
             heapq.heappush(heap, (t_arr, seq, "ratings", bi, 0))
 
-        fail_iter = iter(sorted(cfg.failures))
-        next_fail = next(fail_iter, None)
+        # merged lifecycle stream: failures and rejoins in time order
+        # (a failure at the same instant as a rejoin applies first)
+        life_iter = iter(sorted(
+            [(float(ft), 0, int(fq)) for ft, fq in cfg.failures]
+            + [(float(rt), 1, int(rq)) for rt, rq in cfg.rejoins]))
+        next_life = next(life_iter, None)
 
         update_log: List[Tuple[float, int]] = []
         visit_log: List[Tuple[float, int, int]] = []
@@ -197,10 +207,10 @@ class NomadSimulator:
             t, _, kind, j, q = heapq.heappop(heap)
             sim_time = t
 
-            # failure injection
-            while next_fail is not None and next_fail[0] <= t:
-                ft, fq = next_fail
-                if alive[fq] and alive.sum() > 1:
+            # lifecycle injection (failures and rejoins)
+            while next_life is not None and next_life[0] <= t:
+                ft, lkind, fq = next_life
+                if lkind == 0 and alive[fq] and alive.sum() > 1:
                     alive[fq] = False
                     survivors = np.flatnonzero(alive)
                     # re-enqueue this worker's nomadic items to survivors
@@ -225,7 +235,56 @@ class NomadSimulator:
                         dst = (heir, key[1])
                         self.cell[dst] = (np.concatenate([self.cell[dst], seg])
                                           if dst in self.cell else seg)
-                next_fail = next(fail_iter, None)
+                elif lkind == 1 and not alive[fq]:
+                    # rejoin: the worker comes back empty-handed and
+                    # steals a balanced share of rows from the heaviest
+                    # survivors.  Cell segments split stably (relative
+                    # rating order preserved) and in-flight segments
+                    # captured their list at start, so the start-time
+                    # linearization — and serializability — survives.
+                    alive[fq] = True
+                    clock[fq] = max(clock[fq], ft)
+                    row_cnt = np.bincount(self.rows,
+                                          minlength=self.m).astype(float)
+                    load = np.zeros(p)
+                    np.add.at(load, self.row_owner, row_cnt)
+                    load[~alive] = -np.inf
+                    share = load[alive].sum() / alive.sum()
+                    moved_mask = np.zeros(self.m, dtype=bool)
+                    donors = set()
+                    while load[fq] < share:
+                        donor = int(np.argmax(load))
+                        if donor == fq:
+                            break
+                        cand = np.flatnonzero(
+                            (self.row_owner == donor) & ~moved_mask)
+                        gap = load[donor] - load[fq]
+                        fits = cand[row_cnt[cand] + 1.0 < gap]
+                        if not len(fits):
+                            break
+                        r = fits[int(np.argmax(row_cnt[fits]))]
+                        moved_mask[r] = True
+                        donors.add(donor)
+                        self.row_owner[r] = fq
+                        load[donor] -= row_cnt[r] + 1.0
+                        load[fq] += row_cnt[r] + 1.0
+                    for donor in donors:
+                        for key in [key for key in self.cell
+                                    if key[0] == donor]:
+                            seg = self.cell[key]
+                            take = moved_mask[self.rows[seg]]
+                            if not take.any():
+                                continue
+                            give, keep = seg[take], seg[~take]
+                            if len(keep):
+                                self.cell[key] = keep
+                            else:
+                                del self.cell[key]
+                            dst = (fq, key[1])
+                            self.cell[dst] = (
+                                np.concatenate([self.cell[dst], give])
+                                if dst in self.cell else give)
+                next_life = next(life_iter, None)
 
             if kind == "ratings":
                 # merge the batch into its owner-item segments.  Segments

@@ -69,7 +69,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -509,6 +509,37 @@ class NomadRingEngine:
             H2 = np.concatenate([H, H_new])
         self._load_pack(br_new)
         self.init_factors(W2, H2)
+
+    def migrate(self, br_new: part.BlockedRatings, *,
+                mesh: Union[Optional[Mesh], str] = "keep"):
+        """Swap in a re-packing for a *different worker set* (from
+        ``partition.repack_transition``) — the engine half of an elastic
+        resize / failure recovery.
+
+        The global factors are gathered off the old shards and
+        re-scattered into the new layout; no arithmetic touches them, so
+        every surviving row's and item's W/H values are preserved bit
+        for bit (only their shard placement changes).  ``epoch_idx`` is
+        untouched: the step-size schedule continues across the
+        transition, which is what makes an elastic run's history
+        exactly serializable epoch by epoch.  Pass ``mesh=`` (a Mesh or
+        ``None``) to re-target the SPMD executor onto the new worker
+        set's device mesh; the default keeps the current mesh (local
+        emulation, where worker count is purely a layout property).
+        """
+        if (br_new.m, br_new.n) != (self.br.m, self.br.n):
+            raise ValueError(
+                f"migrate() cannot change the problem shape: "
+                f"({br_new.m}, {br_new.n}) != ({self.br.m}, {self.br.n})")
+        W, H = self.factors()
+        if mesh != "keep":
+            self.mesh = mesh
+        if self.mesh is not None and self.mesh.devices.size != br_new.p:
+            raise ValueError(
+                f"mesh has {self.mesh.devices.size} devices but the new "
+                f"packing wants p={br_new.p}; pass a re-packed mesh")
+        self._load_pack(br_new)
+        self.init_factors(W, H)
 
     def init_factors(self, W0: np.ndarray, H0: np.ndarray):
         Ws, Hs = part.shard_factors(W0, H0, self.br)

@@ -39,7 +39,8 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
-from .schedule import OwnershipSchedule, greedy_two_resource_color
+from .schedule import (OwnershipSchedule, TransitionSchedule, greedy_fill,
+                       greedy_two_resource_color)
 
 
 def balanced_assign(weights: np.ndarray, p: int) -> np.ndarray:
@@ -49,14 +50,12 @@ def balanced_assign(weights: np.ndarray, p: int) -> np.ndarray:
     larger ``weights`` are placed first into the currently lightest bin,
     giving a 4/3-approximate makespan — ample for load balancing.
     """
-    order = np.argsort(-weights, kind="stable")
     load = np.zeros(p, dtype=np.int64)
-    assign = np.zeros(len(weights), dtype=np.int32)
-    for i in order:
-        b = int(np.argmin(load))
-        assign[i] = b
-        load[b] += int(weights[i]) + 1  # +1 so zero-degree items spread too
-    return assign
+    # +1 pad so zero-degree items spread too (schedule.greedy_fill is the
+    # shared LPT recurrence — also behind extend_assign and the elastic
+    # transition compiler)
+    return greedy_fill(load, np.asarray(weights, dtype=np.int64)
+                       ).astype(np.int32)
 
 
 def contiguous_assign(count: int, p: int) -> np.ndarray:
@@ -85,14 +84,8 @@ def extend_assign(assign: np.ndarray, weights: np.ndarray,
     new_weights = np.asarray(new_weights, dtype=np.int64)
     load = np.bincount(assign, weights=weights + 1,
                        minlength=p).astype(np.int64)
-    out = np.concatenate(
-        [assign, np.zeros(len(new_weights), dtype=np.int32)])
-    base = len(assign)
-    for i in np.argsort(-new_weights, kind="stable"):
-        b = int(np.argmin(load))
-        out[base + int(i)] = b
-        load[b] += int(new_weights[i]) + 1
-    return out
+    return np.concatenate(
+        [assign, greedy_fill(load, new_weights).astype(np.int32)])
 
 
 def extend_assignments(br: "BlockedRatings", ext_rows: np.ndarray,
@@ -705,6 +698,136 @@ def repack_delta(
 
     return _fill_layouts(
         cell_info, vals_f, p=p, m=m, n=n, m_local=m_local,
+        n_local=n_local, row_owner=row_owner, row_local=row_local,
+        col_block=col_block, col_local=col_local, row_of=row_of,
+        col_of=col_of, waves=waves, wave_width=wave_width, sub_blocks=1,
+        sub_starts=sub_starts, schedule=sched)
+
+
+def repack_transition(
+    br: BlockedRatings,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    tr: TransitionSchedule,
+    *,
+    schedule: Union[str, OwnershipSchedule, None] = None,
+    schedule_seed: int = 0,
+    wave_width: Optional[int] = None,
+) -> BlockedRatings:
+    """Re-pack for a new worker set along a compiled
+    :class:`~repro.core.schedule.TransitionSchedule` (workers leaving,
+    dying, or joining — the rating set is unchanged).
+
+    The transition analogue of :func:`repack_delta`: a cell whose two
+    endpoints both survive and that neither gains nor loses a single
+    rating keeps its serial sequence *and* wave coloring verbatim —
+    only its local indices are relabeled (vectorized; the greedy wave
+    coloring depends only on the within-cell equality pattern of the
+    labels, which an injective relabel preserves).  The O(nnz_cell)
+    Python-loop re-coloring runs only on cells touched by
+    ``tr.moved_rows`` / ``tr.moved_cols``, so repack cost scales with
+    the migrated data, not the total nnz — NOMAD's decentralized-
+    recovery claim at the packing layer.
+
+    ``schedule`` resolves a fresh ownership schedule for ``tr.p_new``
+    workers (a name from ``SCHEDULE_NAMES``, an explicit schedule of the
+    right ``p``, or ``None`` = keep the base schedule's *name*).  The
+    result is bitwise-identical to a from-scratch ``pack(rows, cols,
+    vals, m, n, tr.p_new, row_owner=tr.row_owner,
+    col_block=tr.col_block, schedule=<same resolved schedule>)`` — both
+    order affected cells with :func:`_order_cell` on identical inputs
+    and fill through :func:`_fill_layouts`.
+    """
+    if br.sub_blocks != 1:
+        raise NotImplementedError(
+            "repack_transition requires sub_blocks == 1 (sub-block "
+            "boundaries shift when n_local changes); re-pack from "
+            "scratch for the pipelined SPMD layout")
+    if tr.p_old != br.p:
+        raise ValueError(f"transition is for p_old={tr.p_old}, "
+                         f"but the packing has p={br.p}")
+    if not (np.array_equal(tr.row_owner_old, br.row_owner)
+            and np.array_equal(tr.col_block_old, br.col_block)):
+        raise ValueError("transition was compiled against a different "
+                         "base assignment than this packing's")
+    p_new = tr.p_new
+    m, n = br.m, br.n
+    waves = br.wave_rows is not None
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals_f = np.asarray(vals, dtype=np.float32)
+    if len(rows) != int(br.mask.sum()):
+        raise ValueError(
+            f"COO has {len(rows)} ratings but br was packed from "
+            f"{int(br.mask.sum())}")
+
+    row_owner = tr.row_owner.astype(np.int32)
+    col_block = tr.col_block.astype(np.int32)
+    m_local, n_local, row_local, col_local, row_of, col_of = _localize(
+        row_owner, col_block, m, n, p_new)
+    sub_starts = sub_block_starts(n_local, 1)
+    sb = max(1, n_local)
+
+    # which new cells can copy their old counterpart verbatim?  exactly
+    # those with a surviving (worker, block) pair that neither gain a
+    # moved-in rating nor lose a moved-out one
+    row_moved = np.zeros(m, dtype=bool)
+    row_moved[tr.moved_rows] = True
+    col_moved = np.zeros(n, dtype=bool)
+    col_moved[tr.moved_cols] = True
+    moved = row_moved[rows] | col_moved[cols]
+    q_new = row_owner[rows].astype(np.int64)
+    b_new = col_block[cols].astype(np.int64)
+    cell_new = q_new * p_new + b_new
+    gained = np.bincount(cell_new[moved], minlength=p_new * p_new
+                         ).reshape(p_new, p_new)
+    cell_old = (br.row_owner[rows].astype(np.int64) * br.p
+                + br.col_block[cols])
+    lost = np.bincount(cell_old[moved], minlength=br.p * br.p
+                       ).reshape(br.p, br.p)
+    counts = np.bincount(cell_new, minlength=p_new * p_new
+                         ).reshape(p_new, p_new)
+
+    sched = OwnershipSchedule.resolve(
+        schedule if schedule is not None
+        else (br.schedule.name if br.schedule is not None
+              and br.schedule.name in ("ring", "random", "balanced")
+              else None),
+        p_new, seed=schedule_seed, loads=counts)
+    old_sched = br.schedule or OwnershipSchedule.ring(br.p)
+
+    # group the moved ratings' cells for the re-sort path
+    affected_order = np.lexsort((rows, cols, cell_new))
+
+    cell_info = [[_empty_cell(waves)] * sched.n_steps for _ in range(p_new)]
+    for q in range(p_new):
+        for b in range(p_new):
+            s = int(sched.step_of[q, b])
+            qo, bo = int(tr.old_of_new[q]), int(tr.old_of_new[b])
+            copyable = (qo >= 0 and bo >= 0 and gained[q, b] == 0
+                        and lost[qo, bo] == 0)
+            if copyable:
+                so = int(old_sched.step_of[qo, bo])
+                cnt = int(br.nnz_cell[qo, so])
+                ids = br.gid[qo, so, :cnt]
+                # the serial sequence and coloring carry over; only the
+                # local labels change (injective relabel within the cell)
+                wave = (np.repeat(np.arange(br.n_waves, dtype=np.int64),
+                                  br.wave_cnt[qo, so]) if waves else None)
+                cell_info[q][s] = (ids, row_local[rows[ids]],
+                                   col_local[cols[ids]], wave,
+                                   np.zeros(cnt, dtype=np.int64))
+            else:
+                sel = affected_order[np.searchsorted(
+                    cell_new[affected_order], q * p_new + b):]
+                ids = sel[:int(counts[q, b])]
+                cell_info[q][s] = _order_cell(
+                    ids, row_local[rows[ids]], col_local[cols[ids]],
+                    waves=waves, sub_blocks=1, sb=sb)
+
+    return _fill_layouts(
+        cell_info, vals_f, p=p_new, m=m, n=n, m_local=m_local,
         n_local=n_local, row_owner=row_owner, row_local=row_local,
         col_block=col_block, col_local=col_local, row_of=row_of,
         col_of=col_of, waves=waves, wave_width=wave_width, sub_blocks=1,

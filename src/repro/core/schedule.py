@@ -47,7 +47,8 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-__all__ = ["OwnershipSchedule", "compile_visits",
+__all__ = ["OwnershipSchedule", "TransitionSchedule", "compile_visits",
+           "compile_transition", "greedy_fill",
            "greedy_two_resource_color", "SCHEDULE_NAMES"]
 
 #: schedule specs accepted by ``pack(..., schedule=...)`` / ``NomadConfig``
@@ -79,6 +80,31 @@ def greedy_two_resource_color(a: np.ndarray, b: np.ndarray,
         next_a[x] = c + 1
         next_b[y] = c + 1
     return colors
+
+
+def greedy_fill(load: np.ndarray, weights: np.ndarray, *,
+                pad: float = 1.0) -> np.ndarray:
+    """Longest-processing-time greedy bin assignment: place items
+    heaviest-first, each into the currently-lightest bin, mutating
+    ``load`` in place (``load[b] += weights[i] + pad`` on placement) and
+    returning the chosen bin per item.
+
+    The single recurrence behind the repo's *sticky* load balancing:
+    ``partition.extend_assign`` applies it to new rows/columns joining an
+    existing packing, ``runtime.elastic.replan_on_failure`` to a dead
+    worker's rows joining the survivors (dead bins pre-loaded with
+    ``inf``), and :func:`compile_transition` to both directions of an
+    elastic resize.  ``pad`` keeps zero-weight items spreading round-robin
+    instead of dogpiling one bin.
+    """
+    load = np.asarray(load)
+    weights = np.asarray(weights)
+    assign = np.empty(len(weights), dtype=np.int64)
+    for i in np.argsort(-weights, kind="stable"):
+        b = int(np.argmin(load))
+        assign[i] = b
+        load[b] += weights[i] + pad
+    return assign
 
 
 def compile_visits(p: int,
@@ -438,3 +464,287 @@ class OwnershipSchedule:
         return (f"OwnershipSchedule(name={self.name!r}, p={self.p}, "
                 f"n_steps={self.n_steps}, "
                 f"active={int(self.active.sum())}/{self.active.size})")
+
+
+# --------------------------------------------------------------------- #
+# Elastic transitions: resize / failure as a compiled migration plan     #
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TransitionSchedule:
+    """A compiled worker-set transition: the migration plan that takes a
+    packing for ``p_old`` workers to one for ``p_new`` workers when
+    workers leave, die, or join between (or within) fused blocks.
+
+    NOMAD's decentralized ownership transfer means a transition costs
+    only the migration of the *changed* shards (dead workers' rows and
+    blocks, joiners' stolen share) — never a cluster-wide re-shard.  The
+    plan is pure data, mirroring :class:`OwnershipSchedule`:
+
+    ``new_of_old[q]``  — new slot of old worker ``q`` (``-1``: left/died).
+                         Survivors compact in old-id order, so relative
+                         worker order — and hence every surviving shard's
+                         content — is preserved.
+    ``old_of_new[q]``  — inverse map (``-1``: a fresh joiner's slot).
+    ``row_owner``      — post-transition row-shard assignment ``(m,)``
+                         in *new* worker ids.
+    ``col_block``      — post-transition item-block assignment ``(n,)``.
+    ``moved_rows`` / ``moved_cols`` — exactly the indices whose owning
+                         worker actually changed; everything else is
+                         bitwise-untouched by :func:`~repro.core.partition.
+                         repack_transition`.
+
+    :meth:`transfer_steps` colors the per-(source, destination) shard
+    moves into conflict-free migration rounds with the same
+    :func:`greedy_two_resource_color` recurrence the ownership schedules
+    use — each round's transfers touch pairwise-disjoint senders and
+    receivers, so any interleaving within a round is exactly
+    serializable (the transition-level generalized diagonal).
+    """
+    p_old: int
+    p_new: int
+    new_of_old: np.ndarray
+    old_of_new: np.ndarray
+    row_owner_old: np.ndarray
+    col_block_old: np.ndarray
+    row_owner: np.ndarray
+    col_block: np.ndarray
+    moved_rows: np.ndarray
+    moved_cols: np.ndarray
+    name: str = "transition"
+
+    def __post_init__(self):
+        if self.p_old < 1 or self.p_new < 1:
+            raise ValueError(
+                f"need p_old, p_new >= 1, got {self.p_old}, {self.p_new}")
+        arrays = {}
+        for field in ("new_of_old", "old_of_new", "row_owner_old",
+                      "col_block_old", "row_owner", "col_block",
+                      "moved_rows", "moved_cols"):
+            a = np.array(getattr(self, field), dtype=np.int64, order="C")
+            a.flags.writeable = False
+            arrays[field] = a
+            object.__setattr__(self, field, a)
+        if arrays["new_of_old"].shape != (self.p_old,):
+            raise ValueError("new_of_old must have shape (p_old,)")
+        if arrays["old_of_new"].shape != (self.p_new,):
+            raise ValueError("old_of_new must have shape (p_new,)")
+        live = arrays["new_of_old"][arrays["new_of_old"] >= 0]
+        if len(np.unique(live)) != len(live) or (
+                len(live) and live.max() >= self.p_new):
+            raise ValueError("new_of_old must map survivors injectively "
+                             "into range(p_new)")
+        src = arrays["old_of_new"]
+        for q in range(self.p_new):
+            if src[q] >= 0 and arrays["new_of_old"][src[q]] != q:
+                raise ValueError("old_of_new is not the inverse of "
+                                 "new_of_old")
+        for field in ("row_owner", "col_block"):
+            a = arrays[field]
+            if len(a) and (a.min() < 0 or a.max() >= self.p_new):
+                raise ValueError(
+                    f"{field} values must lie in [0, {self.p_new})")
+        if arrays["row_owner_old"].shape != arrays["row_owner"].shape:
+            raise ValueError("row_owner_old must align with row_owner")
+        if arrays["col_block_old"].shape != arrays["col_block"].shape:
+            raise ValueError("col_block_old must align with col_block")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def survivors(self) -> np.ndarray:
+        """Old ids of the workers present on both sides."""
+        return np.flatnonzero(self.new_of_old >= 0)
+
+    @property
+    def n_moved(self) -> int:
+        return len(self.moved_rows) + len(self.moved_cols)
+
+    def is_identity(self) -> bool:
+        return (self.p_old == self.p_new and self.n_moved == 0
+                and np.array_equal(self.new_of_old,
+                                   np.arange(self.p_old)))
+
+    def transfers(self) -> List[Tuple[int, int, str, np.ndarray]]:
+        """The shard moves, bundled per edge: ``(src_old, dst_new, kind,
+        ids)`` with ``kind`` in ``{"rows", "cols"}``.  ``src_old`` is the
+        *old* id of the worker that held the shard (for a dead worker the
+        transfer is a recovery — the data comes from the last checkpoint
+        rather than the lost peer; for a live one it is a peer-to-peer
+        send).  Deterministic order: rows before cols, then (src, dst)."""
+        out = []
+        for kind, moved, owner_new in (("rows", self.moved_rows,
+                                        self.row_owner),
+                                       ("cols", self.moved_cols,
+                                        self.col_block)):
+            if not len(moved):
+                continue
+            src = np.asarray(self._moved_src(kind), dtype=np.int64)
+            dst = owner_new[moved]
+            order = np.lexsort((moved, dst, src))
+            edges = src[order] * self.p_new + dst[order]
+            starts = np.flatnonzero(np.r_[True, np.diff(edges) != 0])
+            bounds = np.r_[starts, len(edges)]
+            for i, s in enumerate(starts):
+                ids = moved[order][s:bounds[i + 1]]
+                out.append((int(src[order][s]), int(dst[order][s]), kind,
+                            ids))
+        return out
+
+    def transfer_steps(self) -> List[List[Tuple[int, int, str, np.ndarray]]]:
+        """:meth:`transfers` colored into conflict-free migration rounds:
+        within a round no worker sends or receives twice, so transfers in
+        a round can run concurrently and any interleaving is exactly
+        serializable.  Round count (not shard sizes) is the transition's
+        critical-path length."""
+        tr = self.transfers()
+        if not tr:
+            return []
+        # a dead source is the checkpoint store, modeled as one extra
+        # sender slot per dead worker (recoveries of distinct dead
+        # workers do not serialize against each other's peers)
+        src = np.asarray([t[0] for t in tr], dtype=np.int64)
+        dst = np.asarray([t[1] for t in tr], dtype=np.int64)
+        steps = greedy_two_resource_color(src, dst, self.p_old, self.p_new)
+        out: List[List[Tuple[int, int, str, np.ndarray]]] = [
+            [] for _ in range(int(steps.max()) + 1)]
+        for t, s in zip(tr, steps):
+            out[s].append(t)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def _moved_src(self, kind: str) -> np.ndarray:
+        if kind == "rows":
+            return self.row_owner_old[self.moved_rows]
+        return self.col_block_old[self.moved_cols]
+
+    @classmethod
+    def identity(cls, p: int, row_owner: np.ndarray,
+                 col_block: np.ndarray) -> "TransitionSchedule":
+        """The no-op transition (same workers, same assignment): lets a
+        pure schedule change — e.g. straggler-adaptive re-routing —
+        travel the same relayout path as a resize."""
+        ident = np.arange(p, dtype=np.int64)
+        row_owner = np.asarray(row_owner, dtype=np.int64)
+        col_block = np.asarray(col_block, dtype=np.int64)
+        return cls(p_old=p, p_new=p, new_of_old=ident, old_of_new=ident,
+                   row_owner_old=row_owner, col_block_old=col_block,
+                   row_owner=row_owner, col_block=col_block,
+                   moved_rows=np.empty(0, np.int64),
+                   moved_cols=np.empty(0, np.int64), name="identity")
+
+    def __repr__(self) -> str:
+        return (f"TransitionSchedule(name={self.name!r}, "
+                f"p={self.p_old}->{self.p_new}, "
+                f"moved_rows={len(self.moved_rows)}, "
+                f"moved_cols={len(self.moved_cols)})")
+
+
+def compile_transition(p: int, row_owner: np.ndarray,
+                       col_block: np.ndarray, *,
+                       alive: Optional[np.ndarray] = None,
+                       join: int = 0,
+                       row_weights: Optional[np.ndarray] = None,
+                       col_weights: Optional[np.ndarray] = None,
+                       spread: str = "balance",
+                       name: str = "transition") -> TransitionSchedule:
+    """Compile a worker-set change into a :class:`TransitionSchedule`.
+
+    ``alive`` marks which of the ``p`` current workers survive (default
+    all); ``join`` appends that many fresh workers.  Survivors keep their
+    rows and blocks (compacted into ``0..n_live-1`` in old-id order, so
+    shard contents are untouched).
+
+    ``spread`` picks the recovery/rebalance policy for everything that
+    *must* or *should* move:
+
+    * ``"balance"`` — dead workers' rows/blocks are placed heaviest-first
+      onto the lightest bin via :func:`greedy_fill` (the same sticky
+      recurrence as ``partition.extend_assign``), and joiners steal the
+      largest items from the heaviest bins until they reach the ideal
+      share.  Best post-transition throughput; touches many cells.
+    * ``"minimal"`` — the paper's fast-recovery shape: all orphans land
+      on the single lightest bin and each joiner steals from the single
+      heaviest donor only.  The affected cells stay ``O(p)`` out of
+      ``p**2`` (one worker row + one block column per move group), so
+      ``partition.repack_transition`` re-colors a ``~1/p`` slice of the
+      data instead of all of it — recovery cost scales with the moved
+      shard, not total nnz.  Rebalance later with a ``"balance"``
+      identity-resize once the cluster is stable.
+    """
+    if spread not in ("balance", "minimal"):
+        raise ValueError(f"spread must be 'balance' or 'minimal', "
+                         f"got {spread!r}")
+    row_owner = np.asarray(row_owner, dtype=np.int64)
+    col_block = np.asarray(col_block, dtype=np.int64)
+    if alive is None:
+        alive = np.ones(p, dtype=bool)
+    alive = np.asarray(alive, dtype=bool)
+    if alive.shape != (p,):
+        raise ValueError(f"alive must have shape ({p},), got {alive.shape}")
+    join = int(join)
+    n_live = int(alive.sum())
+    p_new = n_live + join
+    if p_new < 1:
+        raise ValueError("transition would leave zero workers")
+
+    new_of_old = np.full(p, -1, dtype=np.int64)
+    new_of_old[alive] = np.arange(n_live, dtype=np.int64)
+    old_of_new = np.full(p_new, -1, dtype=np.int64)
+    old_of_new[:n_live] = np.flatnonzero(alive)
+
+    def _reassign(owner_old, weights):
+        n_items = len(owner_old)
+        w = (np.ones(n_items, dtype=np.float64) if weights is None
+             else np.asarray(weights, dtype=np.float64))
+        if w.shape != (n_items,):
+            raise ValueError("weights must align with the assignment")
+        owner = np.full(n_items, -1, dtype=np.int64)
+        keep = alive[owner_old]
+        owner[keep] = new_of_old[owner_old[keep]]
+        load = np.zeros(p_new, dtype=np.float64)
+        np.add.at(load, owner[keep], w[keep] + 1.0)
+        # orphans (dead workers' items) go heaviest-first onto the
+        # lightest bin — joiners start empty, so they naturally absorb
+        # orphans first (greedy_fill mutates ``load`` in place); in
+        # minimal-motion mode they all land on one bin instead
+        orphans = np.flatnonzero(~keep)
+        if len(orphans):
+            if spread == "minimal":
+                tgt = int(np.argmin(load))
+                owner[orphans] = tgt
+                load[tgt] += w[orphans].sum() + len(orphans)
+            else:
+                owner[orphans] = greedy_fill(load, w[orphans])
+        # joiners still under the ideal share steal the largest
+        # still-improving item from the heaviest bin (in minimal-motion
+        # mode: from one fixed donor per joiner)
+        share = load.sum() / p_new
+        for q in range(n_live, p_new):
+            fixed_donor = int(np.argmax(load)) if spread == "minimal" \
+                else None
+            while load[q] < share:
+                donor = fixed_donor if fixed_donor is not None \
+                    else int(np.argmax(load))
+                gap = load[donor] - load[q]
+                cand = np.flatnonzero(owner == donor)
+                fits = cand[w[cand] + 1.0 < gap]
+                if donor == q or not len(fits):
+                    break
+                take = fits[int(np.argmax(w[fits]))]
+                owner[take] = q
+                load[donor] -= w[take] + 1.0
+                load[q] += w[take] + 1.0
+        return owner
+
+    row_new = _reassign(row_owner, row_weights)
+    col_new = _reassign(col_block, col_weights)
+    moved_rows = np.flatnonzero(
+        ~alive[row_owner] | (new_of_old[row_owner] != row_new))
+    moved_cols = np.flatnonzero(
+        ~alive[col_block] | (new_of_old[col_block] != col_new))
+    return TransitionSchedule(
+        p_old=p, p_new=p_new, new_of_old=new_of_old, old_of_new=old_of_new,
+        row_owner_old=row_owner, col_block_old=col_block,
+        row_owner=row_new, col_block=col_new, moved_rows=moved_rows,
+        moved_cols=moved_cols, name=name)

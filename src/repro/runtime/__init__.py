@@ -1,5 +1,8 @@
+from .chaos import ChaosEvent, ChaosHarness, ChaosRecovery, ChaosReport, \
+    seeded_script
 from .elastic import ElasticPlan, replan_on_failure, FailureEvent
 from .straggler import StragglerMonitor
 
 __all__ = ["ElasticPlan", "replan_on_failure", "FailureEvent",
-           "StragglerMonitor"]
+           "StragglerMonitor", "ChaosEvent", "ChaosHarness",
+           "ChaosRecovery", "ChaosReport", "seeded_script"]

@@ -1,0 +1,232 @@
+"""Fault-injection harness: scripted or seeded worker kills, slowdowns,
+departures and (re)joins driving a live :class:`~repro.api.StreamingSession`.
+
+The paper's robustness claim is architectural — decentralized ownership
+transfer means losing a worker costs only the migration of *its* shard
+and blocks (§3.2), never a cluster-wide re-shard — and the harness is
+how the repo exercises it end to end: a :func:`seeded_script` of chaos
+events replayed against the engine must leave every surviving shard
+bitwise-untouched and the training history exactly serializable
+(tests/test_elastic.py, ``-m chaos``), and :mod:`benchmarks.elastic_bench`
+times the same events for the recovery-cost rows.
+
+Worker speeds are virtual: a ``slow`` event scales a worker's simulated
+step time, the harness synthesizes per-round timing vectors from the
+packed per-worker loads, and those feed the session's
+:class:`~repro.runtime.straggler.StragglerMonitor` — so the detection /
+eject / schedule-adaptation policies run against reproducible inputs
+without needing an actually-slow host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+ACTIONS = ("kill", "leave", "join", "slow", "heal")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosEvent:
+    """One scripted fault, applied before the given round's training.
+
+    ``worker == -1`` lets the harness pick a live worker (seeded).
+    ``factor`` is the slowdown multiplier for ``slow`` (a 2.0 makes the
+    worker's virtual steps twice as long until a ``heal``)."""
+    round: int
+    action: str
+    worker: int = -1
+    factor: float = 2.0
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"action={self.action!r} not in {ACTIONS}")
+        if self.round < 0:
+            raise ValueError(f"round must be >= 0, got {self.round}")
+        if self.action == "slow" and self.factor <= 1.0:
+            raise ValueError(
+                f"slow factor must be > 1, got {self.factor}")
+
+
+def seeded_script(seed: int, rounds: int, p0: int, *,
+                  kill_prob: float = 0.1, leave_prob: float = 0.1,
+                  join_prob: float = 0.15, slow_prob: float = 0.15,
+                  p_min: int = 2,
+                  p_max: Optional[int] = None) -> List[ChaosEvent]:
+    """A reproducible chaos script: per round, at most one lifecycle
+    event drawn from the given probabilities, with the worker-count
+    walk clamped to ``[p_min, p_max]`` (departures are suppressed at the
+    floor, joins at the ceiling) so every generated script is runnable.
+    Slow workers are eventually healed (a follow-up ``heal`` is queued
+    2-4 rounds later when it fits)."""
+    if p0 < p_min:
+        raise ValueError(f"p0={p0} below p_min={p_min}")
+    p_max = p_max if p_max is not None else 2 * p0
+    rng = np.random.default_rng(seed)
+    events: List[ChaosEvent] = []
+    p = p0
+    for r in range(rounds):
+        u = rng.random()
+        if u < kill_prob and p > p_min:
+            events.append(ChaosEvent(r, "kill",
+                                     int(rng.integers(p))))
+            p -= 1
+        elif u < kill_prob + leave_prob and p > p_min:
+            events.append(ChaosEvent(r, "leave",
+                                     int(rng.integers(p))))
+            p -= 1
+        elif u < kill_prob + leave_prob + join_prob and p < p_max:
+            events.append(ChaosEvent(r, "join"))
+            p += 1
+        elif u < kill_prob + leave_prob + join_prob + slow_prob:
+            events.append(ChaosEvent(
+                r, "slow", int(rng.integers(p)),
+                factor=float(1.5 + 2.0 * rng.random())))
+            heal_at = r + 2 + int(rng.integers(3))
+            if heal_at < rounds:
+                events.append(ChaosEvent(heal_at, "heal", -1))
+    return events
+
+
+@dataclasses.dataclass
+class ChaosRecovery:
+    """What one lifecycle event cost: wall-clock recovery time plus the
+    compiled transition's migration footprint (the repack-scales-with-
+    moved-shards evidence)."""
+    round: int
+    action: str
+    worker: int
+    p_before: int
+    p_after: int
+    recovery_s: float
+    moved_rows: int
+    moved_cols: int
+    n_transfers: int
+    n_transfer_steps: int
+
+
+@dataclasses.dataclass
+class ChaosReport:
+    rounds: int
+    recoveries: List[ChaosRecovery]
+    skipped: List[ChaosEvent]
+    rmse: List[float]
+    p_final: int
+
+    @property
+    def total_recovery_s(self) -> float:
+        return float(sum(r.recovery_s for r in self.recoveries))
+
+
+class ChaosHarness:
+    """Drive a streaming session through a chaos script.
+
+    Each round applies that round's events (worker kills route through
+    ``session.kill`` — checkpoint restore + replay; departures and joins
+    through ``session.resize``), runs ``epochs_per_round`` epochs, and —
+    when the session has a straggler monitor — feeds it virtual
+    per-worker step timings derived from the packed loads and the
+    current slowdown multipliers.
+
+    ``mesh_factory`` (optional, ``p -> Mesh | None``) re-targets the
+    SPMD executor onto a re-packed device mesh at every worker-set
+    change; by default the engine keeps its current mesh (local
+    emulation, where worker count is purely a layout property).
+    """
+
+    def __init__(self, session, events: Sequence[ChaosEvent], *,
+                 epochs_per_round: int = 1, seed: int = 0,
+                 mesh_factory=None):
+        self.session = session
+        self.events = sorted(events, key=lambda e: (e.round, e.action))
+        self.epochs_per_round = int(epochs_per_round)
+        self.mesh_factory = mesh_factory
+        self._rng = np.random.default_rng(seed)
+        self.speed = np.ones(session.config.p, dtype=np.float64)
+
+    # ----------------------------------------------------------------- #
+    def _pick_worker(self, ev: ChaosEvent) -> int:
+        p = self.session.config.p
+        if ev.worker >= 0:
+            if ev.worker >= p:
+                raise ValueError(
+                    f"event {ev} targets worker {ev.worker} but p={p}")
+            return ev.worker
+        if ev.action == "heal":
+            slow = np.flatnonzero(self.speed < 1.0)
+            return int(slow[0]) if len(slow) else 0
+        return int(self._rng.integers(p))
+
+    def _remap_speed(self, tr):
+        old = np.asarray(tr.old_of_new)
+        new = np.ones(tr.p_new, dtype=np.float64)
+        live = old >= 0
+        new[live] = self.speed[old[live]]
+        self.speed = new
+
+    def step_times(self) -> np.ndarray:
+        """Virtual per-worker step durations for one epoch: each
+        worker's packed nnz (the work it serially applies over the
+        schedule) divided by its current speed."""
+        br = self.session._ensure_engine().br
+        load = br.nnz_cell.sum(axis=1).astype(np.float64) + 1.0
+        return load / (load.mean() * self.speed)
+
+    def _apply(self, ev: ChaosEvent, out: ChaosReport):
+        sess = self.session
+        p = sess.config.p
+        if ev.action in ("kill", "leave") and p <= 1:
+            out.skipped.append(ev)
+            return
+        if ev.action == "slow":
+            self.speed[self._pick_worker(ev)] /= ev.factor
+            return
+        if ev.action == "heal":
+            self.speed[self._pick_worker(ev)] = 1.0
+            return
+        p_next = p - 1 if ev.action in ("kill", "leave") else p + 1
+        kw = {} if self.mesh_factory is None else \
+            {"mesh": self.mesh_factory(p_next)}
+        t0 = time.perf_counter()
+        if ev.action == "kill":
+            w = self._pick_worker(ev)
+            tr = sess.kill(w, **kw)
+        elif ev.action == "leave":
+            w = self._pick_worker(ev)
+            tr = sess.resize(leave=(w,), **kw)
+        else:                                   # join
+            w = p
+            tr = sess.resize(join=1, **kw)
+        dt = time.perf_counter() - t0
+        self._remap_speed(tr)
+        out.recoveries.append(ChaosRecovery(
+            round=ev.round, action=ev.action, worker=w,
+            p_before=tr.p_old, p_after=tr.p_new, recovery_s=dt,
+            moved_rows=len(tr.moved_rows), moved_cols=len(tr.moved_cols),
+            n_transfers=len(tr.transfers()),
+            n_transfer_steps=len(tr.transfer_steps())))
+
+    # ----------------------------------------------------------------- #
+    def run(self, rounds: Optional[int] = None) -> ChaosReport:
+        rounds = rounds if rounds is not None else (
+            max((e.round for e in self.events), default=-1) + 1)
+        report = ChaosReport(rounds=rounds, recoveries=[], skipped=[],
+                             rmse=[], p_final=self.session.config.p)
+        i = 0
+        for r in range(rounds):
+            while i < len(self.events) and self.events[i].round <= r:
+                self._apply(self.events[i], report)
+                i += 1
+            res = self.session.fit(epochs=self.epochs_per_round)
+            if len(res.trace_rmse):
+                report.rmse.append(float(res.trace_rmse[-1]))
+            if self.session._monitor is not None:
+                flagged = self.session.observe_step_times(self.step_times())
+                if self.session.config.p != len(self.speed):
+                    # the monitor ejected: drop the flagged workers'
+                    # speed entries (survivors keep old-id order)
+                    self.speed = np.delete(self.speed, flagged)
+        report.p_final = self.session.config.p
+        return report

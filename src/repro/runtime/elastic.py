@@ -22,6 +22,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import schedule
+
 
 @dataclasses.dataclass(frozen=True)
 class FailureEvent:
@@ -68,16 +70,15 @@ def replan_on_failure(plan: ElasticPlan, failed: Sequence[int],
     if len(dead_rows):
         w = (row_weights[dead_rows] if row_weights is not None
              else np.ones(len(dead_rows)))
-        # current live loads
-        load = np.zeros(plan.n_workers)
-        if row_weights is not None:
-            np.add.at(load, row_owner, row_weights)
+        # current live loads — without weights every row still counts 1,
+        # so the greedy fill sees the survivors' true populations instead
+        # of an all-zero array (which dogpiles the moved rows onto
+        # whichever worker sorts first)
+        load = np.bincount(
+            row_owner, weights=row_weights,
+            minlength=plan.n_workers).astype(np.float64)
         load[~alive] = np.inf
-        order = np.argsort(-w)
-        for i in order:
-            tgt = live[np.argmin(load[live])]
-            row_owner[dead_rows[i]] = tgt
-            load[tgt] += w[i]
+        row_owner[dead_rows] = schedule.greedy_fill(load, w, pad=0.0)
 
     block_owner = plan.block_owner.copy()
     dead_blocks = np.flatnonzero(~alive[block_owner])

@@ -32,9 +32,15 @@ class StragglerMonitor:
 
     def update(self, step_times: np.ndarray) -> List[int]:
         """Feed per-worker durations for one step; returns workers to
-        eject (persistently slow)."""
+        eject (persistently slow).  At most ``(n_workers - 1) // 2``
+        workers are ever flagged — ejection turns a straggler into a
+        failure, and a monitor must never amputate half the cluster on
+        a noisy median (at ``p=2`` the median *is* the mean of both
+        workers, so the test can flag a healthy worker; the cap makes
+        ejection impossible there)."""
+        step_times = np.asarray(step_times, dtype=float)
         if self.steps == 0:
-            self.ewma = step_times.astype(float).copy()
+            self.ewma = step_times.copy()
         else:
             self.ewma = self.decay * self.ewma + \
                 (1 - self.decay) * step_times
@@ -42,8 +48,26 @@ class StragglerMonitor:
         if self.steps < self.min_steps:
             return []
         med = np.median(self.ewma)
-        return [int(i) for i in
-                np.flatnonzero(self.ewma > self.threshold * med)]
+        flagged = np.flatnonzero(self.ewma > self.threshold * med)
+        max_eject = (self.n_workers - 1) // 2
+        if len(flagged) > max_eject:
+            # keep only the very slowest — losing quorum is worse than
+            # tolerating a straggler
+            worst = flagged[np.argsort(-self.ewma[flagged],
+                                       kind="stable")[:max_eject]]
+            flagged = np.sort(worst)
+        return [int(i) for i in flagged]
+
+    def speed_estimates(self) -> np.ndarray:
+        """Relative per-worker speed (median worker = 1.0, a 2x-slow
+        straggler = 0.5): the inverse EWMA step time.  This is the live
+        signal ``OwnershipSchedule.balanced`` consumes as load weights —
+        scale each worker's per-cell nnz by ``1 / speed`` so the
+        queue-aware router sends less work through slow workers."""
+        if self.steps == 0:
+            return np.ones(self.n_workers)
+        med = max(float(np.median(self.ewma)), 1e-12)
+        return med / np.maximum(self.ewma, 1e-12)
 
     def utilization_penalty(self, step_times: np.ndarray) -> float:
         """Fraction of compute wasted at a bulk barrier this step (the

@@ -76,6 +76,29 @@ def arrival_script(seed, m0, n0, nnz0, batches, *, max_new_ratings=120,
     return base, script
 
 
+def elastic_script(seed, p0, rounds, *, p_min=2, p_max=6):
+    """A deterministic worker-lifecycle scenario: per round one of
+    ``("fit", epochs)`` / ``("leave", worker)`` / ``("kill", worker)`` /
+    ``("join", count)``, with the worker count clamped to
+    ``[p_min, p_max]`` so every generated script is runnable."""
+    rng = np.random.default_rng((seed, 0xE1A5))
+    ops, p = [], p0
+    for _ in range(rounds):
+        u = rng.random()
+        if u < 0.25 and p > p_min:
+            ops.append(("leave", int(rng.integers(p))))
+            p -= 1
+        elif u < 0.5 and p > p_min:
+            ops.append(("kill", int(rng.integers(p))))
+            p -= 1
+        elif u < 0.7 and p < p_max:
+            ops.append(("join", 1))
+            p += 1
+        else:
+            ops.append(("fit", 1))
+    return ops
+
+
 # --------------------------------------------------------------------- #
 # Strategy bundles (splat into @given(**BUNDLE))                         #
 # --------------------------------------------------------------------- #
@@ -121,3 +144,14 @@ DISPATCH = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
                 spec=st.sampled_from(["ring", "random", "balanced"]),
                 record_every=st.integers(1, 3),
                 fuse_epochs=st.sampled_from([None, 1, 2, 3]))
+
+#: worker-lifecycle scripts for the elastic-session properties (via
+#: :func:`elastic_script`; each example trains a round per op, so keep
+#: the scripts short)
+ELASTIC = dict(seed=st.integers(0, 10_000), p0=st.integers(2, 5),
+               rounds=st.integers(1, 4))
+
+#: worker-set transition shapes for the transition-compiler properties
+TRANSITIONS = dict(seed=st.integers(0, 10_000), p=st.integers(2, 8),
+                   n_fail=st.integers(0, 2), join=st.integers(0, 2),
+                   spread=st.sampled_from(["balance", "minimal"]))

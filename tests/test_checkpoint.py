@@ -189,3 +189,83 @@ def test_train_resume_is_exact(tmp_path):
                     jax.tree.leaves(s_c["params"])):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(c, np.float32))
+
+
+def test_gc_spares_latest_committed_despite_torn_newer(tmp_path):
+    """Crash-safety regression: a torn (uncommitted) step dir *newer*
+    than every committed one must not push the GC cutoff past the latest
+    committed checkpoint — and must itself be left alone, because it may
+    be a concurrent write still in flight."""
+    from repro.checkpoint import gc_checkpoints
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    save_checkpoint(str(tmp_path), 2, t)
+    os.makedirs(tmp_path / "step_00000009")          # torn: no COMMITTED
+    os.makedirs(tmp_path / "step_00000010.tmp")      # mid-write staging
+    gc_checkpoints(str(tmp_path), keep=1)
+    assert latest_step(str(tmp_path)) == 2
+    assert (tmp_path / "step_00000009").exists()
+    assert (tmp_path / "step_00000010.tmp").exists()
+    assert not (tmp_path / "step_00000001").exists()
+
+
+def test_gc_removes_stale_torn_below_cutoff(tmp_path):
+    """Torn dirs strictly older than the keep window are dead weight
+    (the writer that produced them already moved on) and are reclaimed."""
+    from repro.checkpoint import gc_checkpoints
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    save_checkpoint(str(tmp_path), 7, t)
+    os.makedirs(tmp_path / "step_00000003")
+    os.makedirs(tmp_path / "step_00000004.tmp")
+    gc_checkpoints(str(tmp_path), keep=1)
+    assert not (tmp_path / "step_00000003").exists()
+    assert not (tmp_path / "step_00000004.tmp").exists()
+    assert latest_step(str(tmp_path)) == 7
+    assert not (tmp_path / "step_00000005").exists()
+
+
+def test_crash_mid_write_leaves_no_committed_step(tmp_path, monkeypatch):
+    """Kill the writer mid-shard: the directory must contain only .tmp
+    staging — never a COMMITTED marker — so restore sees nothing."""
+    def boom(*a, **k):
+        raise RuntimeError("killed mid-write")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(RuntimeError):
+        save_checkpoint(str(tmp_path), 1, _tree())
+    assert latest_step(str(tmp_path)) is None
+    names = os.listdir(tmp_path)
+    assert all(n.endswith(".tmp") for n in names), names
+    restored, step = restore_checkpoint(str(tmp_path), _tree())
+    assert restored is None and step is None
+
+
+def test_restore_under_old_p_resumes_under_new_p(tmp_path):
+    """Elastic recovery across a worker-count change: the last committed
+    checkpoint was taken at p=4, the cluster has since shrunk to p=3,
+    and a kill must restore the p=4 state, replay the shrink, and land
+    bitwise on the graceful-departure run."""
+    from repro import api
+    from repro.core.stepsize import PowerSchedule
+    problem = api.MCProblem.synthetic(50, 20, 500, k=4, seed=3)
+    cfg = api.NomadConfig(k=4, p=4, epochs=1, seed=1, lam=0.01,
+                          stepsize=PowerSchedule(alpha=0.02, beta=0.1))
+    a = api.StreamingSession(
+        problem, cfg, faults=api.FaultPolicy(checkpoint_dir=str(tmp_path),
+                                             checkpoint_every=10))
+    b = api.StreamingSession(problem, cfg)
+    for s in (a, b):
+        s.fit()
+        s.fit()
+    a.checkpoint()                       # manual checkpoint at p=4
+    for s in (a, b):
+        s.resize(leave=(1,))             # shrink: p=4 -> p=3
+        s.fit()
+    assert a.config.p == 3
+    a.kill(0)                            # restores the p=4 checkpoint
+    b.resize(leave=(0,))
+    Wa, Ha = a._eng.factors()
+    Wb, Hb = b._eng.factors()
+    assert a.config.p == 2
+    np.testing.assert_array_equal(Wa, Wb)
+    np.testing.assert_array_equal(Ha, Hb)

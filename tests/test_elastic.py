@@ -1,7 +1,12 @@
 """Fault tolerance: elastic re-planning, straggler policy, failure-path
-convergence of the NOMAD engine."""
+convergence of the NOMAD engine, and the live elastic engine — workers
+join, leave, and die mid-run with exactly-serializable recovery
+(the ``-m chaos`` tier)."""
+import tempfile
+
 import numpy as np
 import pytest
+import strategies
 from hypothesis_compat import given, settings, st
 
 from repro.runtime.elastic import initial_plan, replan_on_failure
@@ -72,3 +77,374 @@ def test_nomad_converges_through_failure(tiny_mc_problem):
     rmse0 = objective.rmse_np(W0, H0, *pr["test"])
     rmse1 = objective.rmse_np(res.W, res.H, *pr["test"])
     assert rmse1 < 0.7 * rmse0, (rmse0, rmse1)
+
+
+def test_replan_balances_moved_rows_without_weights():
+    """Regression: with ``row_weights=None`` the greedy fill used to see
+    an all-zero load vector and dogpile every orphaned row onto one
+    survivor; it must start from the survivors' true populations."""
+    p = 3
+    row_owner = np.concatenate([np.zeros(60), np.ones(10),
+                                np.full(20, 2)]).astype(np.int64)
+    plan = initial_plan(p, row_owner, 4)
+    new = replan_on_failure(plan, [2])
+    loads = np.bincount(new.row_owner, minlength=p)
+    # worker 1 (population 10) absorbs all 20 orphans; worker 0 (60) none
+    assert loads.tolist() == [60, 30, 0]
+
+
+def test_straggler_cap_never_ejects_half():
+    """Ejection turns a straggler into a failure; the monitor must never
+    amputate >= half the cluster.  At p=2 the median is the mean of both
+    workers, so a healthy worker can exceed threshold x median — the cap
+    makes ejection impossible there."""
+    mon = StragglerMonitor(2, threshold=1.5, min_steps=3)
+    for _ in range(10):
+        assert mon.update(np.array([1.0, 100.0])) == []
+    # p=4: both slow workers clear the threshold but only the slowest
+    # may go ((4 - 1) // 2 == 1)
+    mon = StragglerMonitor(4, threshold=1.5, min_steps=3)
+    flagged = []
+    for _ in range(10):
+        flagged = mon.update(np.array([1.0, 1.0, 8.0, 9.0]))
+    assert flagged == [3]
+
+
+def test_straggler_speed_estimates():
+    mon = StragglerMonitor(4)
+    assert np.allclose(mon.speed_estimates(), 1.0)
+    for _ in range(10):
+        mon.update(np.array([1.0, 1.0, 2.0, 1.0]))
+    s = mon.speed_estimates()
+    assert np.allclose(s[[0, 1, 3]], 1.0, atol=1e-6)
+    assert abs(s[2] - 0.5) < 0.05
+
+
+# --------------------------------------------------------------------- #
+# Elastic engine (-m chaos): transitions, recovery, serializability      #
+# --------------------------------------------------------------------- #
+
+def _mc_problem(seed=0, m=60, n=24, nnz=700, k=4):
+    from repro.api import MCProblem
+    return MCProblem.synthetic(m, n, nnz, k=k, seed=seed)
+
+
+def _nomad_cfg(impl="xla", p=4, epochs=1, **kw):
+    from repro.api import NomadConfig
+    from repro.core.stepsize import PowerSchedule
+    kw.setdefault("stepsize", PowerSchedule(alpha=0.02, beta=0.1))
+    return NomadConfig(k=4, p=p, epochs=epochs, seed=1, lam=0.01,
+                       kernel=impl, **kw)
+
+
+@pytest.mark.chaos
+@settings(max_examples=25, deadline=None)
+@given(**strategies.TRANSITIONS)
+def test_compile_transition_properties(seed, p, n_fail, join, spread):
+    """Any kill/join mix compiles to a valid migration plan: survivors
+    compact in old-id order, every shard lands on a live worker, the
+    moved sets are exactly the changed shards, and the transfer rounds
+    are conflict-free."""
+    from repro.core.schedule import compile_transition
+    rng = np.random.default_rng(seed)
+    n_fail = min(n_fail, p - 1)
+    m, n = 50, 20
+    row_owner = rng.integers(0, p, m)
+    col_block = rng.integers(0, p, n)
+    alive = np.ones(p, dtype=bool)
+    if n_fail:
+        alive[rng.choice(p, n_fail, replace=False)] = False
+    tr = compile_transition(p, row_owner, col_block, alive=alive,
+                            join=join, spread=spread)
+    p_new = p - n_fail + join
+    assert (tr.p_old, tr.p_new) == (p, p_new)
+    surv = np.flatnonzero(alive)
+    assert np.array_equal(tr.new_of_old[surv], np.arange(len(surv)))
+    assert np.array_equal(tr.old_of_new[:len(surv)], surv)
+    assert np.all(tr.old_of_new[len(surv):] == -1)
+    for owner, count in ((tr.row_owner, m), (tr.col_block, n)):
+        assert owner.shape == (count,)
+        assert owner.min() >= 0 and owner.max() < p_new
+    # moved set == exactly the shards whose (compacted) owner changed
+    expect = np.where(alive[row_owner], tr.new_of_old[row_owner], -1)
+    assert np.array_equal(np.sort(tr.moved_rows),
+                          np.flatnonzero(tr.row_owner != expect))
+    unmoved = np.ones(m, dtype=bool)
+    unmoved[tr.moved_rows] = False
+    assert np.array_equal(tr.row_owner[unmoved],
+                          tr.new_of_old[row_owner[unmoved]])
+    # transfer plan covers the moved shards once, in conflict-free rounds
+    total = 0
+    for rnd in tr.transfer_steps():
+        srcs = [s for s, _, _, _ in rnd]
+        dsts = [d for _, d, _, _ in rnd]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+        total += sum(len(ids) for _, _, _, ids in rnd)
+    assert total == len(tr.moved_rows) + len(tr.moved_cols)
+
+
+def _br_fields_equal(a, b):
+    import dataclasses as dc
+    for f in dc.fields(a):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y), f.name
+        else:
+            assert x == y, f.name
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("spread", ["balance", "minimal"])
+@pytest.mark.parametrize("kind", ["kill", "join", "shrink2", "killjoin"])
+def test_repack_transition_bitwise_vs_scratch(kind, spread):
+    """The incremental transition re-pack equals a from-scratch pack
+    pinned to the transition's assignment and schedule — every layout
+    array, bit for bit."""
+    from repro.core import partition as P
+    from repro.core.schedule import compile_transition
+    m, n, nnz, p = 60, 24, 700, 4
+    rows, cols, vals = strategies.coo_problem(3, m, n, nnz)
+    br = P.pack(rows, cols, vals, m, n, p, schedule="random",
+                schedule_seed=2)
+    alive = np.ones(p, dtype=bool)
+    join = 0
+    if kind == "kill":
+        alive[1] = False
+    elif kind == "join":
+        join = 2
+    elif kind == "shrink2":
+        alive[[0, 3]] = False
+    else:
+        alive[2] = False
+        join = 1
+    tr = compile_transition(p, br.row_owner, br.col_block, alive=alive,
+                            join=join,
+                            row_weights=np.bincount(rows, minlength=m),
+                            col_weights=np.bincount(cols, minlength=n),
+                            spread=spread)
+    inc = P.repack_transition(br, rows, cols, vals, tr)
+    scratch = P.pack(rows, cols, vals, m, n, tr.p_new,
+                     row_owner=inc.row_owner, col_block=inc.col_block,
+                     schedule=inc.schedule)
+    _br_fields_equal(inc, scratch)
+    order = inc.schedule_order()
+    assert np.array_equal(np.sort(order), np.arange(nnz))
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("spread", ["balance", "minimal"])
+def test_resize_preserves_factors_bitwise(spread):
+    """Migration is pure data movement: a resize with no training in
+    between must leave W and H bitwise-identical (surviving shards are
+    untouched; only their placement changes)."""
+    from repro.api import StreamingSession
+    sess = StreamingSession(_mc_problem(), _nomad_cfg())
+    sess.fit()
+    W0, H0 = sess._eng.factors()
+    tr = sess.resize(leave=(2,), spread=spread)
+    assert tr.p_new == 3
+    W1, H1 = sess._eng.factors()
+    assert np.array_equal(W0, W1) and np.array_equal(H0, H1)
+    sess.resize(join=2, spread=spread)
+    W2, H2 = sess._eng.factors()
+    assert np.array_equal(W0, W2) and np.array_equal(H0, H2)
+    assert sess.config.p == 5
+    sess.fit()     # and the resized engine still trains
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+def test_elastic_history_exactly_serializable(impl):
+    """The headline property, engine side: across an arbitrary
+    fit / leave / join / kill sequence, every epoch's execution equals a
+    serial replay of the *current* packing's schedule-order witness —
+    the whole elastic history is exactly serializable."""
+    import jax.numpy as jnp
+    from repro import api
+    from repro.core import serial
+    prob = _mc_problem()
+    cfg = _nomad_cfg(impl)
+    d = tempfile.mkdtemp()
+    sess = api.StreamingSession(prob, cfg,
+                                faults=api.FaultPolicy(checkpoint_dir=d))
+    eng = sess._ensure_engine()
+    Wr, Hr = eng.factors()
+    Wr, Hr = jnp.asarray(Wr), jnp.asarray(Hr)
+    lr = cfg.make_stepsize()
+    epoch = 0
+
+    def train_round(epochs=1):
+        nonlocal Wr, Hr, epoch
+        order = sess._eng.br.schedule_order()
+        sess.fit(epochs=epochs)
+        for _ in range(epochs):
+            Wr, Hr = serial.replay_jax(Wr, Hr, prob.rows, prob.cols,
+                                       prob.vals, order, lr(epoch),
+                                       cfg.lam)
+            epoch += 1
+        W1, H1 = sess._eng.factors()
+        np.testing.assert_allclose(np.asarray(Wr), W1, rtol=5e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(Hr), H1, rtol=5e-5,
+                                   atol=1e-5)
+
+    train_round()
+    sess.resize(leave=(1,))
+    train_round()
+    sess.resize(join=2)
+    train_round(2)
+    sess.kill(0)
+    train_round()
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("impl", ["xla", "wave"])
+def test_kill_recovery_bitwise_equals_graceful(impl):
+    """The headline property, recovery side: a worker killed mid-run and
+    recovered from the last checkpoint + round replay lands bitwise on
+    the state a graceful departure of the same worker reaches — and the
+    two runs stay bitwise-identical afterwards."""
+    from repro.api import FaultPolicy, StreamingSession
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d:
+        a = StreamingSession(prob, _nomad_cfg(impl),
+                             faults=FaultPolicy(checkpoint_dir=d,
+                                                checkpoint_every=2))
+        b = StreamingSession(prob, _nomad_cfg(impl))
+        for s in (a, b):
+            s.fit()
+            s.arrive([5], [3], [4.0], epochs=2)
+            s.fit(epochs=1)
+        a.kill(2)
+        b.resize(leave=(2,))
+        Wa, Ha = a._eng.factors()
+        Wb, Hb = b._eng.factors()
+        assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+        assert a.result.epochs_done == b.result.epochs_done
+        ra, rb = a.fit(epochs=1), b.fit(epochs=1)
+        assert np.array_equal(ra.W, rb.W)
+        assert np.array_equal(ra.trace_rmse, rb.trace_rmse)
+
+
+@pytest.mark.chaos
+@settings(max_examples=5, deadline=None)
+@given(**strategies.ELASTIC)
+def test_random_elastic_script_kill_equals_graceful(seed, p0, rounds):
+    """Property form of the headline: for ANY lifecycle script, the
+    kill-and-recover run equals the all-graceful run bitwise, and the
+    final state is still exactly serializable against its witness."""
+    import jax.numpy as jnp
+    from repro import api
+    from repro.core import serial
+    ops = strategies.elastic_script(seed, p0, rounds)
+    prob = _mc_problem(seed=seed % 7, m=40, n=16, nnz=400, k=3)
+    d = tempfile.mkdtemp()
+
+    def run(graceful):
+        cfg = _nomad_cfg(p=p0)
+        faults = None if graceful else api.FaultPolicy(
+            checkpoint_dir=tempfile.mkdtemp(dir=d))
+        sess = api.StreamingSession(prob, cfg, faults=faults)
+        sess.fit()
+        for op, arg in ops:
+            if op == "fit":
+                sess.fit(epochs=arg)
+            elif op == "leave":
+                sess.resize(leave=(arg,))
+            elif op == "join":
+                sess.resize(join=arg)
+            elif op == "kill" and graceful:
+                sess.resize(leave=(arg,))
+            else:
+                sess.kill(arg)
+        return sess
+
+    a, b = run(graceful=False), run(graceful=True)
+    Wa, Ha = a._eng.factors()
+    Wb, Hb = b._eng.factors()
+    assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+    # final state remains exactly serializable under the final schedule
+    order = a._eng.br.schedule_order()
+    epoch = int(a.result.epochs_done)
+    a.fit(epochs=1)
+    lr = a.config.make_stepsize()
+    Wr, Hr = serial.replay_jax(jnp.asarray(Wa), jnp.asarray(Ha),
+                               prob.rows, prob.cols, prob.vals, order,
+                               lr(epoch), a.config.lam)
+    W1, H1 = a._eng.factors()
+    np.testing.assert_allclose(np.asarray(Wr), W1, rtol=5e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Hr), H1, rtol=5e-5, atol=1e-5)
+
+
+@pytest.mark.chaos
+def test_chaos_harness_gauntlet():
+    """End to end: a seeded chaos script (kills, departures, joins,
+    slowdowns) against a monitored session — the engine survives, keeps
+    training, and the recovery log matches the script."""
+    from repro.api import FaultPolicy, StreamingSession
+    from repro.runtime.chaos import ChaosHarness, seeded_script
+    events = seeded_script(7, 12, 4)
+    assert len(events) > 0
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d:
+        sess = StreamingSession(
+            prob, _nomad_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d, monitor=True))
+        sess.fit()
+        report = ChaosHarness(sess, events, seed=3).run()
+        assert report.p_final == sess.config.p
+        assert len(report.rmse) == report.rounds
+        assert np.isfinite(report.rmse).all()
+        lifecycle = [e for e in events
+                     if e.action in ("kill", "leave", "join")]
+        assert len(report.recoveries) + len(report.skipped) \
+            == len(lifecycle)
+        for rec in report.recoveries:
+            # recovery moves shards, never the whole matrix
+            assert 0 <= rec.moved_rows < prob.m
+            assert rec.n_transfer_steps <= rec.n_transfers
+        sess.fit()
+
+
+@pytest.mark.chaos
+def test_adaptive_schedule_reroutes_and_stays_recoverable():
+    """Straggler timings feed OwnershipSchedule.balanced live; the
+    adapted session must still kill-recover bitwise."""
+    import tempfile as tf
+    from repro.api import FaultPolicy, StreamingSession
+
+    def run(d):
+        f = FaultPolicy(checkpoint_dir=d, monitor=True,
+                        adapt_schedule=True)
+        s = StreamingSession(_mc_problem(),
+                             _nomad_cfg(schedule="balanced"), faults=f)
+        s.fit()
+        for _ in range(6):
+            s.observe_step_times([1.0, 1.0, 2.5, 1.0])
+        s.fit()
+        return s
+
+    a, b = run(tf.mkdtemp()), run(tf.mkdtemp())
+    assert a.config.schedule.name == "balanced"
+    a.kill(3)
+    b.resize(leave=(3,))
+    Wa, Ha = a._eng.factors()
+    Wb, Hb = b._eng.factors()
+    assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+
+
+@pytest.mark.chaos
+def test_monitor_ejects_straggler_via_session():
+    from repro.api import FaultPolicy, StreamingSession
+    with tempfile.TemporaryDirectory() as d:
+        f = FaultPolicy(checkpoint_dir=d, monitor=True, eject=True)
+        sess = StreamingSession(_mc_problem(), _nomad_cfg(), faults=f)
+        sess.fit()
+        flagged = []
+        for _ in range(6):
+            flagged = sess.observe_step_times([1.0, 1.0, 5.0, 1.0])
+            if flagged:
+                break
+        assert flagged == [2]
+        assert sess.config.p == 3
+        sess.fit()
