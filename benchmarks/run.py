@@ -94,7 +94,7 @@ def main() -> None:
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
     from . import driver_bench, elastic_bench, schedule_bench, \
-        stream_bench
+        serve_bench, stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -113,6 +113,7 @@ def main() -> None:
         ("schedule", schedule_bench.schedule_rows),
         ("driver", driver_bench.driver_rows),
         ("elastic", elastic_bench.elastic_rows),
+        ("serve", serve_bench.serve_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -126,7 +127,7 @@ def main() -> None:
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
             if name in ("kernel", "solver", "stream", "schedule",
-                        "driver", "elastic"):
+                        "driver", "elastic", "serve"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

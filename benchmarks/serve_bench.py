@@ -1,0 +1,152 @@
+"""Serving-tier benchmarks: top-k scoring kernels and end-to-end
+query throughput/latency with live factor hot-swap.
+
+Two layers, mirroring the subsystem:
+
+* ``serve/topk_{xla,pallas}`` — the batched top-k scorer alone
+  (``W[u_batch] @ H.T`` streamed over catalog tiles with a running
+  top-k merge), per-call latency at a serving-shaped batch.
+* ``serve/e2e_{idle,hotswap}`` — a full ``RecServer`` over factors
+  trained at 1M users x 100k items (ratings stay sparse: dims cost
+  only factor memory), driven by the shared client-load harness from
+  ``repro.launch.serve_mc``.  The hotswap row runs the same load while
+  a concurrent ``StreamingSession`` keeps publishing fresh factor
+  versions into the live store — the p99 gap between the two rows *is*
+  the price of hot-swapping (jit re-trace on the post-growth shapes),
+  and queries/s shows the server never pauses.
+
+Derived fields: ``queries_per_s`` / ``p50_ms`` / ``p99_ms`` (+
+``n_swaps`` for the hotswap row).  Set ``NOMAD_BENCH_SMOKE=1`` (CI) to
+shrink shapes and query counts.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+
+from .common import Row, timed
+
+_SMOKE = bool(os.environ.get("NOMAD_BENCH_SMOKE"))
+
+# serving-shaped scorer microbench: one full microbatch vs the catalog
+_USERS = 64
+_K = 16
+_ITEMS = 2_000 if _SMOKE else 100_000
+_TILE = 512 if _SMOKE else 4096
+_TOPK = 10
+
+# end-to-end scale (ISSUE: 1M users x 100k items; nnz stays ~1 per user)
+_M = 20_000 if _SMOKE else 1_000_000
+_N = 2_000 if _SMOKE else 100_000
+_NNZ = 60_000 if _SMOKE else 1_000_000
+_QUERIES = 200 if _SMOKE else 1_000
+_CLIENTS = 4
+
+
+def _topk_rows() -> list:
+    import jax
+
+    from repro.kernels.policy import KernelPolicy
+    from repro.serve import topk_scores
+
+    rng = np.random.default_rng(0)
+    W_u = rng.normal(size=(_USERS, _K)).astype(np.float32)
+    H = rng.normal(size=(_ITEMS, _K)).astype(np.float32)
+    out = []
+    for impl in ("xla", "pallas"):
+        pol = KernelPolicy.coerce(impl)
+
+        def call():
+            s, i = topk_scores(W_u, H, _TOPK, policy=pol, item_tile=_TILE)
+            jax.block_until_ready((s, i))
+            return s, i
+
+        call()                          # compile outside the clock
+        _, us = timed(call, repeat=3 if _SMOKE else 10)
+        out.append((f"serve/topk_{impl}", us,
+                    f"users={_USERS} items={_ITEMS} k_top={_TOPK} "
+                    f"tile={_TILE}"))
+    return out
+
+
+def _train_store():
+    """One NOMAD run at serving scale; returns (problem, result)."""
+    from repro import api
+    from repro.core.stepsize import PowerSchedule
+
+    problem = api.MCProblem.synthetic(_M, _N, _NNZ, k=_K, seed=0,
+                                      noise=0.05, test_frac=0.05)
+    config = api.NomadConfig(
+        k=_K, p=4, lam=0.05, epochs=1, seed=0, kernel="xla",
+        stepsize=PowerSchedule(alpha=0.08, beta=0.05))
+    return problem, api.solve(problem, config)
+
+
+def _serve_load(store, n_swaps_box=None, sess=None) -> tuple:
+    """Run the client load; when ``sess`` is given, a concurrent
+    streaming thread publishes rounds into ``store`` until the load
+    finishes (the hot-swap configuration)."""
+    from repro.launch.serve_mc import run_load
+    from repro.serve import RecServer, ServeConfig
+
+    server = RecServer(store, ServeConfig(top_k=_TOPK, max_batch=_USERS,
+                                          max_wait_ms=2.0,
+                                          item_tile=_TILE, kernel="xla"))
+    stop = threading.Event()
+    swapper = None
+    if sess is not None:
+        store.attach(sess)
+        rng = np.random.default_rng(1)
+
+        def publish_rounds():
+            while not stop.is_set():
+                cnt = max(64, sess.problem.nnz // 1000)
+                sess.arrive(rows=rng.integers(0, sess.problem.m, cnt),
+                            cols=rng.integers(0, sess.problem.n, cnt),
+                            vals=rng.normal(size=cnt).astype(np.float32),
+                            epochs=1)
+
+        swapper = threading.Thread(target=publish_rounds, daemon=True)
+    with server:
+        server.recommend([0])           # warm the jit caches
+        v0 = store.version
+        if swapper is not None:
+            swapper.start()
+        qps, p50, p99 = run_load(server, store.view().m, _QUERIES,
+                                 clients=_CLIENTS)
+        stop.set()
+        if swapper is not None:
+            swapper.join()
+    if n_swaps_box is not None:
+        n_swaps_box.append(store.version - v0)
+    return qps, p50, p99
+
+
+def serve_rows() -> list:
+    from repro import api
+    from repro.serve import FactorStore
+
+    out: list[Row] = list(_topk_rows())
+    problem, result = _train_store()
+
+    qps, p50, p99 = _serve_load(FactorStore.from_fit_result(result))
+    out.append(("serve/e2e_idle", 1e6 / qps,
+                f"queries_per_s={qps:.1f} p50_ms={p50:.3f} "
+                f"p99_ms={p99:.3f} users={_M} items={_N}"))
+
+    sess = api.StreamingSession(problem, result.config, warm_start=result)
+    swaps: list = []
+    qps, p50, p99 = _serve_load(FactorStore.from_fit_result(result),
+                                n_swaps_box=swaps, sess=sess)
+    out.append(("serve/e2e_hotswap", 1e6 / qps,
+                f"queries_per_s={qps:.1f} p50_ms={p50:.3f} "
+                f"p99_ms={p99:.3f} n_swaps={swaps[0]} users={_M} "
+                f"items={_N}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in serve_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -1235,7 +1235,8 @@ class StreamingSession:
 
     def __init__(self, problem: MCProblem, config: SolverConfig, *,
                  mesh=None, verbose: bool = False,
-                 faults: Optional[FaultPolicy] = None):
+                 faults: Optional[FaultPolicy] = None,
+                 warm_start: Optional[FitResult] = None):
         if not isinstance(problem, MCProblem):
             raise TypeError(f"problem must be MCProblem, got "
                             f"{type(problem).__name__}")
@@ -1246,12 +1247,22 @@ class StreamingSession:
         if faults is not None and not isinstance(faults, FaultPolicy):
             raise TypeError(f"faults must be FaultPolicy, got "
                             f"{type(faults).__name__}")
+        if warm_start is not None and not isinstance(warm_start,
+                                                    FitResult):
+            raise TypeError(f"warm_start must be FitResult, got "
+                            f"{type(warm_start).__name__}")
         self.problem = problem
         self.config = config
         self.mesh = mesh
         self.verbose = verbose
         self.faults = faults
-        self.result: Optional[FitResult] = None
+        #: optional resumed state (e.g. a restored checkpoint — how a
+        #: serving-side session continues a training run): the first
+        #: round warm-starts from these factors with the step-size
+        #: schedule resumed at ``warm_start.epochs_done``, and a
+        #: :meth:`kill` recovery replays on top of the same state
+        self._warm0 = warm_start
+        self.result: Optional[FitResult] = warm_start
         self.history: List[FitResult] = []
         self._eng = None
         # elastic state: the base problem/config every kill-recovery
@@ -1269,6 +1280,9 @@ class StreamingSession:
             from .runtime.straggler import StragglerMonitor
             self._monitor = StragglerMonitor(config.p,
                                              threshold=faults.threshold)
+        # round observers (the serving tier's hot-swap hook): called with
+        # each round's FitResult the moment it completes
+        self._subscribers: List[Callable[[FitResult], Any]] = []
 
     def _cfg(self, epochs) -> SolverConfig:
         return self.config if epochs is None else dataclasses.replace(
@@ -1279,7 +1293,26 @@ class StreamingSession:
         res = _finalize(res, cfg, t0)
         self.result = res
         self.history.append(res)
+        for cb in tuple(self._subscribers):
+            cb(res)
         return res
+
+    def subscribe(self, callback: Callable[[FitResult], Any]):
+        """Register a round observer: ``callback(result)`` runs after
+        every completed ``fit``/``arrive`` round (including rounds
+        re-executed by a :meth:`kill` recovery replay — versions stay
+        monotone through recovery).  This is how a
+        :class:`repro.serve.FactorStore` hot-swaps live factors out of a
+        training session (``store.attach(session)``).  Returns the
+        callback for symmetry with :meth:`unsubscribe`."""
+        if not callable(callback):
+            raise TypeError(f"callback must be callable, got "
+                            f"{type(callback).__name__}")
+        self._subscribers.append(callback)
+        return callback
+
+    def unsubscribe(self, callback) -> None:
+        self._subscribers.remove(callback)
 
     def _ensure_engine(self):
         if self._eng is None:
@@ -1323,6 +1356,7 @@ class StreamingSession:
                                     n_new=n_new, test=test)
         t0 = time.perf_counter()
         if isinstance(cfg, NomadConfig):
+            self._ensure_engine()       # warm_start sessions skip fit()
             br = _streaming_repack(self._eng.br, self.problem, delta, cfg)
             self._eng.grow(br, seed=cfg.seed)
             res = _nomad_run(self._eng, cfg, delta.merged_test,
@@ -1416,7 +1450,7 @@ class StreamingSession:
         self.problem = self._base_problem
         self.config = self._base_config
         self._schedule_spec = self._base_config.schedule
-        self.result = None
+        self.result = self._warm0       # replay starts where __init__ did
         self.history = []
         self._eng = None
         self._replay_log = []

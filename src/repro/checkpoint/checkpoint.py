@@ -75,13 +75,27 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *committed* step in ``ckpt_dir``, or ``None``.
+
+    This is the serving/restore boot contract: ``.tmp`` staging dirs,
+    torn step dirs without a COMMITTED marker (a crash mid-write — by
+    the same reasoning ``gc_checkpoints`` leaves newer torn dirs alone,
+    they may be writes in flight) and unparseable ``step_*`` names are
+    all skipped, so a server booting while a training process is still
+    publishing always lands on a complete checkpoint (regression-tested
+    in tests/test_checkpoint.py and tests/test_serve.py)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp") and \
-                os.path.exists(os.path.join(ckpt_dir, name, "COMMITTED")):
+        if not name.startswith("step_") or name.endswith(".tmp") or \
+                not os.path.exists(os.path.join(ckpt_dir, name,
+                                                "COMMITTED")):
+            continue
+        try:
             steps.append(int(name.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
     return max(steps) if steps else None
 
 

@@ -59,6 +59,19 @@ class KernelPolicy:
         """True if this policy consumes the wave layout."""
         return self.impl in WAVE_IMPLS
 
+    @property
+    def serve_impl(self) -> str:
+        """Which serving top-k scorer this policy selects
+        (``repro.serve.topk``): the Pallas tile kernel for the Pallas
+        train impls, the XLA scan otherwise; ``'auto'`` follows the
+        train dispatch rule (Pallas on TPU).  The wave/sequential split
+        is a training concern — for serving only the lowering matters."""
+        if self.impl == "auto":
+            from .ops import on_tpu
+            return "pallas" if on_tpu() else "xla"
+        return "pallas" if self.impl in ("pallas", "wave_pallas") \
+            else "xla"
+
     @classmethod
     def coerce(cls, value: Union[str, "KernelPolicy", None], *,
                sub_blocks: int = 1) -> "KernelPolicy":

@@ -1,7 +1,13 @@
-"""Serving: prefill + decode step factories and a batched-request CLI.
+"""LM serving: prefill + decode step factories and a batched-request CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch musicgen_large \
         --smoke --batch 4 --prompt-len 32 --gen 16
+
+This module serves the *language-model* scaffolding.  The matrix-
+completion workload — top-k recommendation over trained ``(W, H)``
+factors with live hot-swap from streaming training — has its own CLI in
+:mod:`repro.launch.serve_mc` (console script ``nomad-serve-mc``) built
+on the :mod:`repro.serve` subsystem.
 """
 from __future__ import annotations
 

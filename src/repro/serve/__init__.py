@@ -1,0 +1,19 @@
+"""Recommendation serving tier (DESIGN.md §11): training produces
+``(W, H)``; this package consumes them.
+
+* :mod:`~repro.serve.topk`   — batched device-resident top-k scoring
+  (XLA scan + Pallas tile kernel, exact vs. the dense argsort oracle).
+* :mod:`~repro.serve.store`  — :class:`FactorStore`: double-buffered,
+  version-stamped factor shards with live hot-swap from a
+  ``StreamingSession`` (readers always see one consistent version).
+* :mod:`~repro.serve.server` — :class:`RecServer`: microbatching
+  request front end; boots from a ``save_fit_result`` checkpoint.
+"""
+from .server import Recommendation, RecServer, ServeConfig
+from .store import FactorStore, FactorView
+from .topk import topk_dense_oracle, topk_scores
+
+__all__ = [
+    "FactorStore", "FactorView", "Recommendation", "RecServer",
+    "ServeConfig", "topk_dense_oracle", "topk_scores",
+]

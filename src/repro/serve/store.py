@@ -1,0 +1,210 @@
+"""Live factor storage for the serving tier: double-buffered,
+version-stamped, hot-swappable from streaming training.
+
+The NOMAD-specific requirement (paper §2.3): ratings arrive continuously
+and the factors are always up to date — so the server must swap in the
+factors each ``StreamingSession`` round publishes *without pausing
+queries*, and no query may ever score against a mix of two versions.
+
+The protocol:
+
+* a **version** is one immutable :class:`FactorView` — device-resident
+  ``W``/``H``, the version stamp, and the versioned catalog maps
+  (``user_ids``/``item_ids``) that translate external ids to factor rows
+  for exactly this version's shapes (factor growth from a
+  ``ProblemDelta`` changes ``m``/``n``, so the maps are part of the
+  version, never shared mutable state);
+* :meth:`FactorStore.publish` stages the new arrays into the *inactive*
+  slot of a two-slot buffer, then swaps the current-view reference —
+  one atomic reference assignment, no reader lock.  Readers call
+  :meth:`view` and get whichever complete version was current at that
+  instant; queries in flight on the previous version keep their view
+  (the slot they hold is not re-staged until two more publishes, and the
+  view object itself pins its arrays regardless);
+* the version stamp is monotonically increasing, and every query
+  response carries the stamp it was scored under, so hot-swap atomicity
+  is *observable* (and property-tested: tests/test_serve.py interleaves
+  reads with publishes and asserts every response is entirely version v
+  or entirely v+1).
+
+Boot paths: :meth:`from_fit_result` (an in-process training run) and
+:meth:`from_checkpoint` (the newest *committed* ``save_fit_result``
+step — torn in-flight dirs are skipped by ``checkpoint.latest_step``).
+:meth:`attach` subscribes the store to a ``StreamingSession`` so every
+``fit``/``arrive`` round publishes its factors as the next version.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FactorView", "FactorStore"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorView:
+    """One immutable published factor version.
+
+    ``W``/``H`` are device arrays (uploaded once at publish, shared by
+    every query on this version).  ``user_ids``/``item_ids`` map factor
+    rows to external catalog ids; ``None`` means the identity (external
+    id == row), which append-only ``ProblemDelta`` growth preserves.
+    """
+    version: int
+    W: jnp.ndarray                      # (m, k) user factors
+    H: jnp.ndarray                      # (n, k) item factors
+    user_ids: Optional[np.ndarray] = None   # (m,) row -> external user id
+    item_ids: Optional[np.ndarray] = None   # (n,) row -> external item id
+
+    @property
+    def m(self) -> int:
+        return int(self.W.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.H.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.W.shape[1])
+
+    def user_rows(self, users: Sequence[int]) -> np.ndarray:
+        """Factor rows for external user ids under *this* version's
+        catalog map.  Unknown ids raise ``KeyError`` — a user added by a
+        later version does not exist in this one."""
+        users = np.atleast_1d(np.asarray(users, dtype=np.int64))
+        if self.user_ids is None:
+            bad = (users < 0) | (users >= self.m)
+            if bad.any():
+                raise KeyError(
+                    f"unknown user ids {users[bad].tolist()} (version "
+                    f"{self.version} has m={self.m} users)")
+            return users
+        rows = np.searchsorted(self._user_sorted, users)
+        rows = np.clip(rows, 0, len(self._user_sorted) - 1)
+        hit = self._user_sorted[rows] == users
+        if not hit.all():
+            raise KeyError(
+                f"unknown user ids {users[~hit].tolist()} in version "
+                f"{self.version}")
+        return self._user_order[rows]
+
+    def item_catalog(self, rows: np.ndarray) -> np.ndarray:
+        """External item ids for factor rows (identity when unmapped)."""
+        if self.item_ids is None:
+            return rows
+        return np.asarray(self.item_ids)[rows]
+
+    def __post_init__(self):
+        for name in ("user_ids", "item_ids"):
+            ids = getattr(self, name)
+            if ids is None:
+                continue
+            ids = np.asarray(ids, dtype=np.int64)
+            want = self.m if name == "user_ids" else self.n
+            if ids.shape != (want,):
+                raise ValueError(
+                    f"{name} must have shape ({want},), got {ids.shape}")
+            if len(np.unique(ids)) != len(ids):
+                raise ValueError(f"{name} contains duplicate ids")
+            object.__setattr__(self, name, ids)
+        if self.user_ids is not None:
+            order = np.argsort(self.user_ids, kind="stable")
+            object.__setattr__(self, "_user_order", order)
+            object.__setattr__(self, "_user_sorted", self.user_ids[order])
+
+
+class FactorStore:
+    """Double-buffered, version-stamped factor shards for serving.
+
+    Writers (one at a time — publishes are serialized by a lock) stage
+    into the inactive buffer slot; readers take the current
+    :class:`FactorView` with one un-locked reference read.  See the
+    module docstring for the full protocol.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._buffers = [None, None]    # the two publish slots
+        self._view: Optional[FactorView] = None
+
+    # ----------------------------------------------------------------- #
+    # Writer side                                                        #
+    # ----------------------------------------------------------------- #
+
+    def publish(self, W, H, *, user_ids=None, item_ids=None) -> FactorView:
+        """Stage ``(W, H)`` as the next version and swap it live.  The
+        arrays are uploaded to device here, once, so queries never pay
+        the transfer.  Returns the published view."""
+        W = jnp.asarray(W)
+        H = jnp.asarray(H)
+        if W.ndim != 2 or H.ndim != 2 or W.shape[1] != H.shape[1]:
+            raise ValueError(
+                f"W and H must be (m, k)/(n, k) with one k, got "
+                f"{W.shape}/{H.shape}")
+        with self._lock:
+            version = 0 if self._view is None else self._view.version + 1
+            view = FactorView(version=version, W=W, H=H,
+                              user_ids=user_ids, item_ids=item_ids)
+            self._buffers[version % 2] = view
+            self._view = view           # the atomic swap readers observe
+        return view
+
+    def publish_result(self, result) -> FactorView:
+        """Publish a ``FitResult``'s factors (a ``solve`` /
+        ``partial_fit`` / session round output)."""
+        return self.publish(result.W, result.H)
+
+    def attach(self, session):
+        """Subscribe to a :class:`repro.api.StreamingSession`: every
+        round's factors are published as the next version the moment the
+        round completes.  Returns the callback (pass it to
+        ``session.unsubscribe`` to detach)."""
+        return session.subscribe(self.publish_result)
+
+    # ----------------------------------------------------------------- #
+    # Reader side                                                        #
+    # ----------------------------------------------------------------- #
+
+    def view(self) -> FactorView:
+        """The current version — one consistent, immutable snapshot."""
+        view = self._view
+        if view is None:
+            raise RuntimeError(
+                "FactorStore has no published factors yet; call "
+                "publish()/publish_result() or boot from_checkpoint()")
+        return view
+
+    @property
+    def version(self) -> Optional[int]:
+        view = self._view
+        return None if view is None else view.version
+
+    # ----------------------------------------------------------------- #
+    # Boot                                                               #
+    # ----------------------------------------------------------------- #
+
+    @classmethod
+    def from_fit_result(cls, result) -> "FactorStore":
+        store = cls()
+        store.publish_result(result)
+        return store
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str,
+                        step: Optional[int] = None) -> "FactorStore":
+        """Boot from the newest *committed* ``save_fit_result`` step in
+        ``ckpt_dir`` (torn in-flight step dirs are skipped — the
+        crash-safety semantics of ``checkpoint.latest_step``)."""
+        from ..checkpoint import restore_fit_result
+        result, found = restore_fit_result(ckpt_dir, step)
+        if result is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {ckpt_dir!r}")
+        store = cls.from_fit_result(result)
+        store.boot_step = found
+        return store

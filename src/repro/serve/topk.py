@@ -1,0 +1,234 @@
+"""Batched top-k scoring: ``scores = W[u_batch] @ H.T`` over the item
+catalog, tiled so H streams through the scorer while a running top-k is
+merged across tiles.
+
+This is the serving hot loop (ROADMAP ``[serve]``): a recommendation
+query for user ``u`` is the ``k_top`` largest entries of one row of the
+reconstructed matrix.  Materializing the full ``(batch, n_items)`` score
+matrix at catalog scale (100k+ items) would blow past on-chip memory, so
+both implementations tile the catalog:
+
+* ``_topk_xla``     — ``lax.scan`` over item tiles; per tile a
+  ``(U, k_rank) @ (k_rank, T)`` matmul, ``lax.top_k`` tile candidates,
+  and a ``lax.top_k`` merge of (running ∥ candidates).
+* ``_topk_pallas``  — a Pallas kernel with the user-batch factor tile
+  *resident in VMEM* across the whole grid while H tiles stream through
+  (the serving twin of the training kernels' blocking scheme,
+  DESIGN.md §5); the running top-k lives in the resident output block
+  and is merged in-kernel by an exact iterative (score, id) selection.
+
+Both are **exact** against the dense argsort oracle
+(:func:`topk_dense_oracle`) with deterministic tie-breaking: ties in
+score resolve to the *smaller item id*, always.  The XLA path gets this
+from ``lax.top_k``'s lower-index-first tie rule plus an ordering
+invariant (running entries always carry smaller ids than the current
+tile's candidates, and within each part equal scores appear in
+id-ascending order — so position order inside the merged array *is* id
+order); the Pallas path selects each slot explicitly by
+(max score, then min id).  Exactness incl. engineered ties is
+property-tested in tests/test_serve.py.
+
+Dispatch goes through :class:`repro.kernels.policy.KernelPolicy`
+(``policy.serve_impl``): the Pallas train impls select the Pallas tile
+kernel, everything else the XLA path, and ``"auto"`` follows the train
+rule (Pallas on TPU).  Like the train kernels, the Pallas path runs
+``interpret=True`` off-TPU.
+
+Rank padding note: the Pallas path pads ``k_rank`` to the 128-lane VPU
+width with zero columns.  Zero summands leave every f32 partial sum
+bit-identical (x + 0.0 == x), so the padded dot equals the unpadded one
+exactly — the serving analogue of the SGD kernels' zero-invariant lane
+padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..kernels.policy import KernelPolicy
+
+LANE = 128
+
+__all__ = ["topk_scores", "topk_dense_oracle"]
+
+
+def topk_dense_oracle(W_u, H, k_top: int):
+    """Dense reference: materialize ``W_u @ H.T`` and stably argsort.
+
+    Scores use the same jnp matmul as the tiled paths (selection must be
+    the only thing that differs); the ordering is an independent host
+    ``np.argsort(-scores, kind="stable")``, i.e. score-descending with
+    ties broken by smaller item id.  Returns ``(scores, ids)`` of shape
+    ``(U, k_top)``.
+    """
+    scores = np.asarray(jnp.asarray(W_u) @ jnp.asarray(H).T)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k_top]
+    return np.take_along_axis(scores, order, axis=1), \
+        order.astype(np.int32)
+
+
+def topk_scores(W_u, H, k_top: int, *,
+                policy: KernelPolicy | str | None = None,
+                item_tile: int = 4096):
+    """Top-``k_top`` items for a batch of user factor rows.
+
+    W_u       -- (U, k_rank) gathered user factors
+    H         -- (n_items, k_rank) item factors (device-resident)
+    k_top     -- list length per user (1 <= k_top <= n_items)
+    policy    -- KernelPolicy (or legacy impl string); ``serve_impl``
+                 picks the XLA or Pallas tile scorer
+    item_tile -- catalog tile width the scorer streams over
+
+    Returns ``(scores, ids)`` — both ``(U, k_top)``, score-descending,
+    ties by smaller id; exact vs. :func:`topk_dense_oracle`.
+    """
+    policy = KernelPolicy.coerce(policy)
+    n = int(H.shape[0])
+    if not 1 <= k_top <= n:
+        raise ValueError(
+            f"k_top must lie in [1, n_items={n}], got {k_top}")
+    if item_tile < 1:
+        raise ValueError(f"item_tile must be >= 1, got {item_tile}")
+    if W_u.shape[-1] != H.shape[-1]:
+        raise ValueError(
+            f"rank mismatch: W_u has k={W_u.shape[-1]}, H has "
+            f"k={H.shape[-1]}")
+    if policy.serve_impl == "pallas":
+        from ..kernels.ops import on_tpu
+        return _topk_pallas(W_u, H, k_top=k_top, item_tile=item_tile,
+                            interpret=not on_tpu())
+    return _topk_xla(W_u, H, k_top=k_top, item_tile=item_tile)
+
+
+# --------------------------------------------------------------------- #
+# XLA path: scan over catalog tiles, lax.top_k merge                      #
+# --------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("k_top", "item_tile"))
+def _topk_xla(W_u, H, *, k_top: int, item_tile: int):
+    U, _ = W_u.shape
+    n = H.shape[0]
+    T = min(item_tile, max(n, 1))
+    n_tiles = -(-n // T)
+    Hp = jnp.pad(H, ((0, n_tiles * T - n), (0, 0)))
+    tiles = Hp.reshape(n_tiles, T, -1)
+    bases = (jnp.arange(n_tiles, dtype=jnp.int32) * T)
+    kk = min(k_top, T)
+
+    def body(carry, xs):
+        run_s, run_i = carry
+        tile, base = xs
+        scores = W_u @ tile.T                           # (U, T)
+        ids = base + jnp.arange(T, dtype=jnp.int32)
+        # catalog padding (and any genuine -inf score) parks on the
+        # sentinel id n, which sorts after every real item
+        scores = jnp.where((ids < n)[None, :], scores, -jnp.inf)
+        cand_s, li = jax.lax.top_k(scores, kk)
+        cand_i = jnp.where(jnp.isneginf(cand_s), n, base + li)
+        # merge: running ids all precede this tile's ids, and both parts
+        # keep equal scores in id-ascending position order, so top_k's
+        # lower-position-first tie rule == smaller-id-first
+        new_s, sel = jax.lax.top_k(
+            jnp.concatenate([run_s, cand_s], axis=1), k_top)
+        new_i = jnp.take_along_axis(
+            jnp.concatenate([run_i, cand_i], axis=1), sel, axis=1)
+        return (new_s, new_i), None
+
+    init = (jnp.full((U, k_top), -jnp.inf, W_u.dtype),
+            jnp.full((U, k_top), n, jnp.int32))
+    (out_s, out_i), _ = jax.lax.scan(body, init, (tiles, bases))
+    return out_s, out_i.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+# Pallas path: resident user tile + running top-k, H tiles streamed       #
+# --------------------------------------------------------------------- #
+
+def _select_topk(cat_s, cat_i, k_top: int, sentinel):
+    """Exact (score desc, id asc) selection of ``k_top`` slots out of the
+    concatenated (running ∥ tile) candidates — argmax/argmin only, no
+    sort primitive, so it lowers anywhere a reduction does."""
+    out_s, out_i = [], []
+    avail = jnp.ones(cat_s.shape, jnp.bool_)
+    for _ in range(k_top):
+        masked_s = jnp.where(avail, cat_s, -jnp.inf)
+        best_s = jnp.max(masked_s, axis=1, keepdims=True)
+        at_best = (masked_s == best_s) & avail
+        masked_i = jnp.where(at_best, cat_i, sentinel)
+        best_i = jnp.min(masked_i, axis=1, keepdims=True)
+        # ids are unique across (running ∥ tile), so this picks one slot
+        # per row — except at the all-sentinel tail, where clearing every
+        # sentinel copy at once is harmless (they are interchangeable)
+        avail = avail & ~(at_best & (cat_i == best_i))
+        out_s.append(best_s[:, 0])
+        out_i.append(best_i[:, 0])
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _topk_kernel(scalars_ref, Wu_ref, Ht_ref, s_ref, i_ref, *,
+                 k_top: int, tile: int):
+    step = pl.program_id(0)
+    n = scalars_ref[0]
+
+    @pl.when(step == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref[...], -jnp.inf)
+        i_ref[...] = jnp.full_like(i_ref[...], n)
+
+    U = Wu_ref.shape[0]
+    scores = jnp.dot(Wu_ref[...], Ht_ref[...].T,
+                     preferred_element_type=s_ref.dtype)     # (U, T)
+    ids = step * tile + jax.lax.broadcasted_iota(jnp.int32, (U, tile), 1)
+    scores = jnp.where(ids < n, scores, -jnp.inf)
+    ids = jnp.where(ids < n, ids, n)
+    new_s, new_i = _select_topk(
+        jnp.concatenate([s_ref[...], scores], axis=1),
+        jnp.concatenate([i_ref[...], ids], axis=1),
+        k_top, sentinel=n)
+    s_ref[...] = new_s
+    i_ref[...] = new_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_top", "item_tile", "interpret"))
+def _topk_pallas(W_u, H, *, k_top: int, item_tile: int,
+                 interpret: bool = True):
+    U, kr = W_u.shape
+    n = H.shape[0]
+    T = min(item_tile, max(n, 1))
+    n_tiles = -(-n // T)
+    k_pad = (-kr) % LANE
+    Wp = jnp.pad(W_u, ((0, 0), (0, k_pad)))
+    Hp = jnp.pad(H, ((0, n_tiles * T - n), (0, k_pad)))
+    scalars = jnp.array([n], jnp.int32)
+    kp = kr + k_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scalars
+            pl.BlockSpec((U, kp), lambda s: (0, 0)),          # W_u resident
+            pl.BlockSpec((T, kp), lambda s: (s, 0)),          # H streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((U, k_top), lambda s: (0, 0)),       # running s
+            pl.BlockSpec((U, k_top), lambda s: (0, 0)),       # running ids
+        ],
+    )
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(_topk_kernel, k_top=k_top, tile=T),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((U, k_top), W_u.dtype),
+            jax.ShapeDtypeStruct((U, k_top), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, Wp, Hp)
+    return out_s, out_i

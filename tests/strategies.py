@@ -40,6 +40,24 @@ def random_cell(rng, m_t, n_t, k, nnz):
     return W, H, rows, cols, vals
 
 
+def topk_case(seed, users, items, k_rank, ties):
+    """A serving-shaped scoring case: ``(W_u, H)`` float32.  With
+    ``ties`` the factors are integer-quantized and a block of item rows
+    duplicated, engineering exact score collisions so the deterministic
+    smaller-id tie rule is actually exercised (random floats almost
+    never collide)."""
+    rng = np.random.default_rng((seed, 0x70C4))
+    if ties:
+        W_u = rng.integers(-2, 3, (users, k_rank)).astype(np.float32)
+        H = rng.integers(-2, 3, (items, k_rank)).astype(np.float32)
+        dup = rng.integers(0, items, max(1, items // 3))
+        H[dup] = H[rng.integers(0, items, len(dup))]
+    else:
+        W_u = rng.normal(size=(users, k_rank)).astype(np.float32)
+        H = rng.normal(size=(items, k_rank)).astype(np.float32)
+    return W_u, H
+
+
 def drawn_schedule(seed, p):
     """A valid OwnershipSchedule compiled from a random visit order: all
     p**2 cells in a uniformly-shuffled sequence — much more adversarial
@@ -150,6 +168,14 @@ DISPATCH = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
 #: the scripts short)
 ELASTIC = dict(seed=st.integers(0, 10_000), p0=st.integers(2, 5),
                rounds=st.integers(1, 4))
+
+#: serving top-k scoring cases (via :func:`topk_case`): batch x catalog
+#: x rank x tile shapes, k_top relative to the catalog, engineered-tie
+#: factors, and both scorer implementations
+TOPK = dict(seed=st.integers(0, 10_000), users=st.integers(1, 9),
+            items=st.integers(1, 70), k_rank=st.sampled_from([1, 3, 16]),
+            k_top=st.integers(1, 70), item_tile=st.sampled_from([4, 16, 64]),
+            ties=st.booleans(), impl=st.sampled_from(["xla", "pallas"]))
 
 #: worker-set transition shapes for the transition-compiler properties
 TRANSITIONS = dict(seed=st.integers(0, 10_000), p=st.integers(2, 8),

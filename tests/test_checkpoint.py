@@ -225,6 +225,36 @@ def test_gc_removes_stale_torn_below_cutoff(tmp_path):
     assert not (tmp_path / "step_00000005").exists()
 
 
+def test_boot_skips_torn_newer_dir(tmp_path, tiny_mc_problem):
+    """Serving-boot regression: a server coming up while the trainer is
+    mid-checkpoint must boot from the newest *committed* step — torn
+    newer dirs (no COMMITTED), .tmp staging, and junk names are all
+    skipped, never crashed on."""
+    from repro import api
+    from repro.serve import FactorStore
+
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                            n=pr["n"], test=pr["test"])
+    res = api.solve(problem, api.NomadConfig(k=pr["k"], p=2, epochs=1))
+    save_fit_result(str(tmp_path), 4, res)
+    os.makedirs(tmp_path / "step_00000009")          # torn: no COMMITTED
+    (tmp_path / "step_00000009" / "shard_0.npz").write_bytes(b"garbage")
+    os.makedirs(tmp_path / "step_00000010.tmp")      # mid-write staging
+    os.makedirs(tmp_path / "step_junkname")          # unparseable
+    assert latest_step(str(tmp_path)) == 4
+    restored, step = restore_fit_result(str(tmp_path))
+    assert step == 4
+    np.testing.assert_array_equal(restored.W, res.W)
+
+    store = FactorStore.from_checkpoint(str(tmp_path))
+    assert store.boot_step == 4
+    np.testing.assert_array_equal(np.asarray(store.view().W), res.W)
+    with pytest.raises(FileNotFoundError):
+        FactorStore.from_checkpoint(str(tmp_path / "nope"))
+
+
 def test_crash_mid_write_leaves_no_committed_step(tmp_path, monkeypatch):
     """Kill the writer mid-shard: the directory must contain only .tmp
     staging — never a COMMITTED marker — so restore sees nothing."""
