@@ -18,9 +18,18 @@ Two families of rows, both recorded under ``schedule/`` in
   vs queue-aware routing, with and without stragglers (speed of one
   worker cut to 1/4).  This is the virtual-time prediction the engine
   rows are the device-level counterpart of.
+* ``schedule/topo_*`` — the network-model close-the-loop (DESIGN.md
+  §12): on a 2-level mesh (two nodes of four workers, 20x slower
+  inter-node links) the per-step-barrier makespan of ring / balanced /
+  topology-aware routing, with and without a straggler, plus a real
+  engine replay of the topology-aware schedule with its bitwise
+  serializability witness (``schedule_order()`` vs serial replay).
+  Set ``NOMAD_BENCH_SMOKE=1`` (CI) to skip the straggler variants and
+  the engine warm-up pass.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -28,10 +37,13 @@ import numpy as np
 from repro import api
 from repro.core.async_sim import NomadSimulator, SimConfig
 from repro.core.objective import init_factors_np
+from repro.core.schedule import OwnershipSchedule
 from repro.core.stepsize import PowerSchedule
+from repro.core.topology import HierarchicalMesh, schedule_makespan
 from .common import small_netflix
 
 _P, _K, _EPOCHS = 8, 8, 3
+_SMOKE = bool(os.environ.get("NOMAD_BENCH_SMOKE"))
 
 
 def _engine_rows(out: list) -> None:
@@ -88,8 +100,81 @@ def _sim_rows(out: list) -> None:
                         f"virtual_time={res.sim_time:.0f}"))
 
 
+def _topo_rows(out: list) -> None:
+    pr = small_netflix(k=_K)
+    rows, cols, vals = pr["train"]
+    problem = api.MCProblem(rows=rows, cols=cols, vals=vals,
+                            m=pr["m"], n=pr["n"], test=pr["test"])
+    mesh = HierarchicalMesh(p=_P, workers_per_node=_P // 2,
+                            intra_cost=2.0, inter_cost=40.0,
+                            inter_latency=10.0)
+    # per-(worker, block) rating counts under the default packing: the
+    # loads both routing and pricing see
+    br0 = problem.packed(_P, schedule="ring")
+    cell = (br0.row_owner[rows].astype(np.int64) * _P
+            + br0.col_block[cols])
+    counts = np.bincount(cell, minlength=_P * _P).reshape(
+        _P, _P).astype(np.float64)
+    block_size = _K * pr["n"] / _P          # floats shipped per item block
+    straggles = (False,) if _SMOKE else (False, True)
+    for straggle in straggles:
+        speed = np.ones(_P)
+        if straggle:
+            speed[0] = 0.25
+        w_loads = counts / speed[:, None]   # routing sees slow workers
+        scheds = {
+            "ring": OwnershipSchedule.ring(_P),
+            "balanced": OwnershipSchedule.balanced(_P, seed=0,
+                                                   loads=w_loads),
+            "topo": OwnershipSchedule.topology_aware(
+                _P, seed=0, loads=w_loads, net=mesh,
+                block_size=block_size),
+        }
+        for name, sched in scheds.items():
+            t0 = time.perf_counter()
+            mk = schedule_makespan(sched, counts, mesh, a=1.0,
+                                   block_size=block_size, speed=speed)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            tag = f"topo_{name}" + ("_straggler" if straggle else "")
+            out.append((f"schedule/{tag}", wall_us,
+                        f"makespan={mk:.0f} n_steps={sched.n_steps}"))
+    # real engine replay of the topology-aware schedule, with the
+    # serializability witness: engine epoch == serial replay of
+    # schedule_order()
+    import jax.numpy as jnp
+    from repro.core import nomad, serial
+    from repro.core import partition as P
+    sched = OwnershipSchedule.topology_aware(
+        _P, seed=0, loads=counts, net=mesh, block_size=block_size)
+    br = P.pack(rows, cols, vals, pr["m"], pr["n"], _P, schedule=sched)
+    order = br.schedule_order()
+    lr = PowerSchedule(alpha=0.05, beta=0.02)
+    W0, H0 = init_factors_np(0, pr["m"], pr["n"], _K)
+    W0, H0 = W0.astype(np.float32), H0.astype(np.float32)
+    eng = nomad.NomadRingEngine(br=br, k=_K, lam=0.01, stepsize=lr,
+                                impl="wave")
+    eng.init_factors(W0, H0)
+    n_epochs = 1 if _SMOKE else 2           # epoch 0 doubles as warm-up
+    Wr, Hr = jnp.asarray(W0), jnp.asarray(H0)
+    wall_us = 0.0
+    for e in range(n_epochs):
+        t0 = time.perf_counter()
+        eng.run_epoch()
+        wall_us = (time.perf_counter() - t0) * 1e6   # keep last epoch
+        Wr, Hr = serial.replay_jax(Wr, Hr, rows, cols, vals, order,
+                                   lr(e), 0.01)
+    W1, H1 = eng.factors()
+    err = max(float(np.max(np.abs(np.asarray(Wr) - W1))),
+              float(np.max(np.abs(np.asarray(Hr) - H1))))
+    ok = bool(np.array_equal(np.sort(order), np.arange(len(rows))))
+    out.append(("schedule/topo_engine_replay", wall_us,
+                f"replay_max_err={err:.2e} order_complete={ok} "
+                f"n_steps={br.n_steps}"))
+
+
 def schedule_rows() -> list:
     out: list = []
     _engine_rows(out)
     _sim_rows(out)
+    _topo_rows(out)
     return out

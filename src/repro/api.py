@@ -44,13 +44,16 @@ from .core import partition as part
 from .core.schedule import (OwnershipSchedule, SCHEDULE_NAMES,
                             TransitionSchedule, compile_transition)
 from .core.stepsize import PowerSchedule
+from .core.topology import (HierarchicalMesh, NetworkModel,
+                            UniformTopology, schedule_makespan)
 from .kernels.policy import KernelPolicy
 
 __all__ = [
     "MCProblem", "ProblemDelta", "SolverConfig", "NomadConfig",
     "DsgdConfig", "CcdConfig", "AlsConfig", "HogwildConfig",
     "AsyncSimConfig", "FitResult", "KernelPolicy", "OwnershipSchedule",
-    "TransitionSchedule", "FaultPolicy",
+    "TransitionSchedule", "FaultPolicy", "NetworkModel",
+    "UniformTopology", "HierarchicalMesh", "schedule_makespan",
     "solve", "register_solver", "solver_names", "config_for",
     "partial_fit", "register_partial_fit", "supports_partial_fit",
     "streaming_solver_names", "StreamingSession",
@@ -551,11 +554,28 @@ class AsyncSimConfig(SolverConfig):
     #: mode only) — feed it back as ``NomadConfig(schedule=...)`` to
     #: replay the predicted routing on the real engine
     emit_schedule: bool = False
+    #: physical network model (DESIGN.md §12): ``None`` keeps the flat
+    #: §3.2 ``c * k`` pricing bitwise; a
+    #: :class:`~repro.core.topology.NetworkModel` (e.g.
+    #: :class:`~repro.core.topology.HierarchicalMesh`) prices every item
+    #: transfer by placement, with link contention in virtual time —
+    #: for NOMAD every ``"arrive"`` hop, for DSGD/DSGD++ the per-sub-
+    #: epoch block-shipment barrier
+    topology: Optional[NetworkModel] = None
 
     def __post_init__(self):
         super().__post_init__()
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.topology is not None:
+            if not isinstance(self.topology, NetworkModel):
+                raise TypeError(
+                    f"topology must be a NetworkModel, got "
+                    f"{type(self.topology).__name__}")
+            t_p = getattr(self.topology, "p", None)
+            if t_p is not None and t_p != self.p:
+                raise ValueError(
+                    f"topology is for p={t_p}, but config has p={self.p}")
         if self.emit_schedule and self.mode != "nomad":
             raise ValueError(
                 "emit_schedule requires mode='nomad' (the bulk-"
@@ -601,7 +621,8 @@ class AsyncSimConfig(SolverConfig):
             speed=(None if self.speed is None
                    else np.asarray(self.speed, dtype=np.float64)),
             failures=self.failures, rejoins=self.rejoins, seed=self.seed,
-            record_every=self.record_every, arrivals=self.arrivals)
+            record_every=self.record_every, arrivals=self.arrivals,
+            topology=self.topology)
 
 
 # ---------------------------------------------------------------------- #

@@ -13,11 +13,14 @@ from . import objective  # the module; the J(W,H) function is objective.objectiv
 from .objective import init_factors, init_factors_np, rmse, rmse_np
 from .schedule import OwnershipSchedule
 from .stepsize import PowerSchedule, BoldDriver
+from .topology import (HierarchicalMesh, NetworkModel, UniformTopology,
+                       schedule_makespan)
 from . import baselines, partition, serial
 
 __all__ = [
     "NomadRingEngine", "fit", "NomadSimulator", "SimConfig", "SimResult",
     "simulate_dsgd", "init_factors", "init_factors_np", "objective", "rmse",
     "rmse_np", "OwnershipSchedule", "PowerSchedule", "BoldDriver",
-    "baselines", "partition", "serial",
+    "NetworkModel", "UniformTopology", "HierarchicalMesh",
+    "schedule_makespan", "baselines", "partition", "serial",
 ]

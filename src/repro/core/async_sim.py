@@ -33,6 +33,7 @@ import numpy as np
 
 from .objective import sgd_pair_update, rmse_np
 from .stepsize import PowerSchedule
+from .topology import NetworkModel
 
 
 @dataclasses.dataclass
@@ -64,6 +65,13 @@ class SimConfig:
     #: their owner's per-item segments and are picked up the next time
     #: the nomadic item visits (streaming workload, NOMAD only).
     arrivals: Tuple[Tuple[float, Tuple[int, ...]], ...] = ()
+    #: physical network model (DESIGN.md §12).  ``None`` keeps the flat
+    #: §3.2 pricing — every hop costs exactly ``c * k``, bitwise the
+    #: historical behavior.  A :class:`~repro.core.topology.NetworkModel`
+    #: prices every item transfer (NOMAD ``"arrive"`` events, DSGD block
+    #: shipments) by source/destination placement, with per-link
+    #: contention tracked in virtual time.
+    topology: Optional[NetworkModel] = None
 
 
 @dataclasses.dataclass
@@ -149,6 +157,17 @@ class NomadSimulator:
         nnz = len(self.rows)
         target_updates = int(cfg.epochs * nnz)
 
+        # communication pricing: flat c*k when no topology (the exact
+        # historical expression — bitwise fallback), else the network
+        # model with per-link contention tracked in virtual time
+        net_state = (None if cfg.topology is None
+                     else cfg.topology.state())
+
+        def ship(src: int, dst: int, t: float) -> float:
+            if net_state is None:
+                return t + cfg.c * k
+            return net_state.send(src, dst, k, t)
+
         # initial random assignment of items to queues (Alg. 1 lines 7-10)
         queues: List[deque] = [deque() for _ in range(p)]
         for j in range(self.n):
@@ -200,8 +219,17 @@ class NomadSimulator:
         visit_log: List[Tuple[float, int, int]] = []
         trace: List[Tuple[float, int, float]] = []
         n_updates = 0
-        record_at = int(cfg.record_every * nnz)
+        # clamp the trace interval to >= 1 update: record_every * nnz < 1
+        # used to floor to 0 and record on every finish event
+        rec_interval = max(1, int(cfg.record_every * nnz))
+        record_at = rec_interval
         sim_time = 0.0
+        # time-weighted alive-worker integral for the throughput
+        # denominator: a worker dead 90% of the run must not count like
+        # one that died at the end
+        alive_integral = 0.0
+        life_t = 0.0
+        n_life = 0
 
         while heap and n_updates < target_updates:
             t, _, kind, j, q = heapq.heappop(heap)
@@ -211,21 +239,24 @@ class NomadSimulator:
             while next_life is not None and next_life[0] <= t:
                 ft, lkind, fq = next_life
                 if lkind == 0 and alive[fq] and alive.sum() > 1:
+                    alive_integral += alive.sum() * (ft - life_t)
+                    life_t = ft
+                    n_life += 1
                     alive[fq] = False
                     survivors = np.flatnonzero(alive)
                     # re-enqueue this worker's nomadic items to survivors
                     for item in queues[fq]:
                         tgt = int(rng.choice(survivors))
                         seq += 1
-                        heapq.heappush(heap, (ft + cfg.c * k, seq, "arrive",
-                                              item, tgt))
+                        heapq.heappush(heap, (ship(fq, tgt, ft), seq,
+                                              "arrive", item, tgt))
                     queues[fq].clear()
                     if fq in self._pending:   # in-flight item is lost & resent
                         item, _, _ = self._pending.pop(fq)
                         tgt = int(rng.choice(survivors))
                         seq += 1
-                        heapq.heappush(heap, (ft + cfg.c * k, seq, "arrive",
-                                              item, tgt))
+                        heapq.heappush(heap, (ship(fq, tgt, ft), seq,
+                                              "arrive", item, tgt))
                     # row ownership moves to a survivor (elastic re-shard)
                     heir = int(survivors[0])
                     moved = np.flatnonzero(self.row_owner == fq)
@@ -242,6 +273,9 @@ class NomadSimulator:
                     # rating order preserved) and in-flight segments
                     # captured their list at start, so the start-time
                     # linearization — and serializability — survives.
+                    alive_integral += alive.sum() * (ft - life_t)
+                    life_t = ft
+                    n_life += 1
                     alive[fq] = True
                     clock[fq] = max(clock[fq], ft)
                     row_cnt = np.bincount(self.rows,
@@ -302,6 +336,21 @@ class NomadSimulator:
                 continue
 
             if not alive[q]:
+                if kind == "arrive":
+                    # the delivery raced a failure: the message was in
+                    # the heap when its addressee died, so the failure
+                    # handler (which re-routes queued and in-flight-
+                    # compute items) never saw it.  Dropping it would
+                    # permanently remove item j from circulation and
+                    # starve H[j] until a rejoin — forward it to a live
+                    # survivor with one more priced hop instead.  Only
+                    # the arrival time moves, so the start-time
+                    # linearization (and serializability) is preserved.
+                    live = np.flatnonzero(alive)
+                    tgt = int(rng.choice(live))
+                    seq += 1
+                    heapq.heappush(heap, (ship(q, tgt, t), seq, "arrive",
+                                          j, tgt))
                 continue
 
             if kind == "arrive":
@@ -337,16 +386,33 @@ class NomadSimulator:
                 else:
                     dest = int(rng.choice(live))
                 seq += 1
-                heapq.heappush(heap, (t + cfg.c * k, seq, "arrive", j, dest))
+                heapq.heappush(heap, (ship(q, dest, t), seq, "arrive", j,
+                                      dest))
                 start_next(q, t)
 
                 if self.test is not None and n_updates >= record_at:
-                    record_at += int(cfg.record_every * nnz)
+                    record_at += rec_interval
                     trace.append((t, n_updates,
                                   rmse_np(self.W, self.H, *self.test)))
 
+        # a run shorter than one record interval — or one whose last
+        # updates landed after the last recorded entry — must still
+        # report its final RMSE (consumers read trace[-1] /
+        # FitResult.rmse[-1]); mirrors the simulate_dsgd guard
+        if self.test is not None and (not trace
+                                      or trace[-1][1] != n_updates):
+            trace.append((sim_time, n_updates,
+                          rmse_np(self.W, self.H, *self.test)))
+
         total_time = max(sim_time, 1e-12)
-        thpt = n_updates / (total_time * max(1, int(alive.sum())))
+        if n_life == 0:
+            # no lifecycle event ever applied: the historical constant
+            # denominator is already exact (and bitwise-preserved)
+            avg_alive = float(max(1, int(alive.sum())))
+        else:
+            alive_integral += alive.sum() * max(0.0, sim_time - life_t)
+            avg_alive = max(alive_integral / total_time, 1e-12)
+        thpt = n_updates / (total_time * avg_alive)
         return SimResult(W=self.W, H=self.H, update_log=update_log,
                          n_updates=n_updates, sim_time=sim_time,
                          busy_time=busy, trace=trace, throughput=thpt,
@@ -375,6 +441,11 @@ def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
 
     nnz = len(rows)
     pair_t = np.zeros(nnz, dtype=np.int64)
+    # topology pricing of the per-sub-epoch block shipment: worker q
+    # ships its whole block (n_local item vectors) to q+1 mod p, all
+    # departing together, contending for shared links; None keeps the
+    # flat c * k * n_local barrier (bitwise the historical expression)
+    net_state = None if cfg.topology is None else cfg.topology.state()
     t_sim = 0.0
     n_updates = 0
     busy = np.zeros(p)
@@ -402,9 +473,18 @@ def simulate_dsgd(cfg: SimConfig, m: int, n: int, rows, cols, vals,
             busy += durs
             # each worker ships one whole block (n/p item vectors) per
             # sub-epoch; DSGD++ overlaps that transfer with compute
-            comm = cfg.c * k * br.n_local
-            step_time = (max(durs.max(), comm) if overlap
-                         else durs.max() + comm)
+            durs_max = float(durs.max())
+            if net_state is None:
+                comm = cfg.c * k * br.n_local
+            else:
+                depart = t_sim if overlap else t_sim + durs_max
+                comm = 0.0
+                for q in range(p):
+                    arr = net_state.send(q, (q + 1) % p, k * br.n_local,
+                                         depart)
+                    comm = max(comm, arr - depart)
+            step_time = (max(durs_max, comm) if overlap
+                         else durs_max + comm)
             t_sim += step_time   # barrier: everyone waits for the slowest
             if test is not None and n_updates >= record_at:
                 record_at += int(cfg.record_every * nnz)

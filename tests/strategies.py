@@ -71,6 +71,23 @@ def drawn_schedule(seed, p):
         p, [cells[i] for i in order], name=f"drawn_{seed}")
 
 
+def mesh_topology(seed, p):
+    """A seeded 2-level :class:`~repro.core.topology.HierarchicalMesh`
+    for ``p`` workers: node size, latency split and the intra/inter
+    bandwidth gap all drawn from the seed, so the property tests cover
+    meshes from nearly-flat to strongly hierarchical."""
+    from repro.core.topology import HierarchicalMesh
+    rng = np.random.default_rng((seed, 0x4E70))
+    wpn = int(rng.integers(1, max(2, p // 2) + 1))
+    intra = float(rng.uniform(0.5, 4.0))
+    return HierarchicalMesh(
+        p=p, workers_per_node=wpn,
+        intra_latency=float(rng.uniform(0.0, 2.0)),
+        inter_latency=float(rng.uniform(0.0, 30.0)),
+        intra_cost=intra,
+        inter_cost=intra * float(rng.uniform(2.0, 20.0)))
+
+
 def arrival_script(seed, m0, n0, nnz0, batches, *, max_new_ratings=120,
                    max_m_growth=6, max_n_growth=4):
     """A deterministic streaming scenario: the base problem plus a list
@@ -147,6 +164,11 @@ ARRIVALS = dict(seed=st.integers(0, 10_000), p=st.integers(1, 5),
 #: simulator topology (worker count, routing, stragglers)
 SIM_TOPOLOGY = dict(p=st.integers(2, 6), seed=st.integers(0, 10_000),
                     load_balance=st.booleans(), straggle=st.booleans())
+
+#: simulator runs on a physical network (via :func:`mesh_topology`),
+#: with the full elastic lifecycle toggled on top
+MESH_SIM = dict(p=st.integers(2, 6), seed=st.integers(0, 10_000),
+                straggle=st.booleans(), churn=st.booleans())
 
 #: ownership-schedule specs for the schedule-IR properties: a named
 #: constructor or a hypothesis-drawn random visit order (via
