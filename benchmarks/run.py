@@ -37,11 +37,19 @@ def _run_meta() -> dict:
         ).stdout.strip() or "unknown"
     except (OSError, subprocess.SubprocessError):
         sha = "unknown"
+    try:
+        # os.cpu_count() reports the machine, not the runner's cgroup
+        # quota — sched_getaffinity is what's actually schedulable
+        n_cpu = len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        n_cpu = os.cpu_count() or 1
     return {
         "git_sha": sha,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
-        "cpu_count": os.cpu_count() or 1,
+        "device_kind": jax.devices()[0].device_kind,
+        "dtype_policy": os.environ.get("NOMAD_BENCH_DTYPE", "fp32"),
+        "cpu_count": n_cpu,
     }
 
 
@@ -127,7 +135,7 @@ def main() -> None:
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
             if name in ("kernel", "solver", "stream", "schedule",
-                        "driver", "elastic", "serve"):
+                        "driver", "elastic", "serve", "roofline"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

@@ -423,7 +423,9 @@ class SolverConfig:
 class NomadConfig(SolverConfig):
     """NOMAD engine (local emulation, or SPMD when ``solve`` gets a
     mesh).  ``kernel`` is a :class:`KernelPolicy` or a legacy impl string;
-    ``sub_blocks`` merges into the policy.
+    ``sub_blocks`` and ``dtype_policy`` (``'fp32'``/``'bf16'``/``'fp16'``
+    factor storage with fp32 accumulation — DESIGN.md §13) merge into
+    the policy.
 
     ``schedule`` selects the ownership-transfer order (DESIGN.md §8):
     ``"ring"`` (canonical rotation, bitwise-preserves the historical
@@ -447,6 +449,7 @@ class NomadConfig(SolverConfig):
     kernel: Union[str, KernelPolicy] = "xla"
     balanced: bool = True
     sub_blocks: int = 1
+    dtype_policy: str = "fp32"
     schedule: Union[str, OwnershipSchedule] = "ring"
     schedule_seed: int = 0
     dispatch: str = "fused"
@@ -480,11 +483,15 @@ class NomadConfig(SolverConfig):
             raise ValueError(
                 f"schedule={self.schedule!r} not in {SCHEDULE_NAMES} (or "
                 "pass an OwnershipSchedule)")
-        # coercion validates impl x sub_blocks at construction time
+        # coercion validates impl x sub_blocks x dtype_policy at
+        # construction time (and mirrors any merged/downgraded value
+        # back onto the flat config fields)
         object.__setattr__(self, "kernel",
-                           KernelPolicy.coerce(self.kernel,
-                                               sub_blocks=self.sub_blocks))
+                           KernelPolicy.coerce(
+                               self.kernel, sub_blocks=self.sub_blocks,
+                               dtype_policy=self.dtype_policy))
         object.__setattr__(self, "sub_blocks", self.kernel.sub_blocks)
+        object.__setattr__(self, "dtype_policy", self.kernel.dtype_policy)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -283,8 +283,19 @@ def restore_fit_result(ckpt_dir: str,
     extras = {}
     if meta.get("extras_schedule") is not None:
         extras["schedule"] = _decode_value(meta["extras_schedule"])
+
+    def _leaf(key):
+        # honor the ``__dtype__/<key>`` sidecar ``_flatten`` writes for
+        # non-native dtypes: bf16 factors saved under a mixed
+        # ``dtype_policy`` restore as bf16, not as their f32 carrier
+        arr = data[key]
+        tag = "__dtype__/" + key
+        if tag in data.files:
+            arr = np.asarray(jnp.asarray(arr).astype(str(data[tag])))
+        return arr
+
     return FitResult(
-        W=data["W"], H=data["H"],
+        W=_leaf("W"), H=_leaf("H"),
         trace_epochs=data["trace_epochs"],
         trace_rmse=data["trace_rmse"],
         epochs_done=meta["epochs_done"],

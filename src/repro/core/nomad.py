@@ -114,10 +114,11 @@ def _local_epoch_body(Ws, Hs, rows, cols, vals, mask, perm_src, lr, lam,
     def sched_step(carry, step_data):
         Ws, Hs = carry
         r, c, v, m, psrc = step_data  # data (p, ...), psrc (p,)
-        Ws, Hs = jax.vmap(
-            lambda W, H, rr, cc, vv, mm: kops.block_sgd(
-                W, H, rr, cc, vv, mm, lr, lam, policy=policy)
-        )(Ws, Hs, r, c, v, m)
+        # a step's p cells are conflict-free: block_sgd_cells runs them
+        # as one occupancy grid kernel on accelerators, or the bitwise
+        # historical vmap-of-block_sgd everywhere else
+        Ws, Hs = kops.block_sgd_cells(Ws, Hs, r, c, v, m, lr, lam,
+                                      policy=policy)
         # ownership transfer: worker q's next block comes from psrc[q]
         Hs = jnp.take(Hs, psrc, axis=0)
         return (Ws, Hs), ()
@@ -169,13 +170,16 @@ def _stream_epoch_body(Ws, Hs, data, lr, lam, policy: KernelPolicy,
     n_local = Hs.shape[1]
     Wf = Ws.reshape(p * m_local, k)
     Hf = Hs.reshape(p * n_local, k)
-    lr = jnp.asarray(lr, dtype=Wf.dtype)
-    lam = jnp.asarray(lam, dtype=Wf.dtype)
+    cd = policy.compute_dtype            # None on the fp32 bitwise path
+    lr = jnp.asarray(lr, dtype=cd or Wf.dtype)
+    lam = jnp.asarray(lam, dtype=cd or Wf.dtype)
     P, Q = Wf.shape[0], Hf.shape[0]
     if policy.wave:
-        pair = kref.sgd_pair_batch
+        pair = functools.partial(kref.sgd_pair_batch, compute_dtype=cd)
     else:
-        pair = jax.vmap(kref.sgd_pair, in_axes=(0, 0, 0, None, None))
+        pair = jax.vmap(
+            functools.partial(kref.sgd_pair, compute_dtype=cd),
+            in_axes=(0, 0, 0, None, None))
 
     def slot(carry, x):
         Wf, Hf = carry
@@ -352,8 +356,11 @@ def _sharded_rmse_body(Ws, Hs, ridx, cidx, vals):
     k = Ws.shape[-1]
     wi = Ws.reshape(-1, k)[ridx]
     hj = Hs.reshape(-1, k)[cidx]
-    pred = jnp.sum(wi * hj, axis=-1)
-    return jnp.sqrt(jnp.mean((vals - pred) ** 2))
+    # evaluate in fp32 regardless of factor storage (a no-op cast for
+    # fp32 shards, so the historical trace stays bitwise)
+    pred = jnp.sum(wi.astype(jnp.float32) * hj.astype(jnp.float32),
+                   axis=-1)
+    return jnp.sqrt(jnp.mean((vals.astype(jnp.float32) - pred) ** 2))
 
 
 _sharded_rmse = jax.jit(_sharded_rmse_body)
@@ -543,15 +550,22 @@ class NomadRingEngine:
 
     def init_factors(self, W0: np.ndarray, H0: np.ndarray):
         Ws, Hs = part.shard_factors(W0, H0, self.br)
-        self.Ws = jnp.asarray(Ws)
-        self.Hs = jnp.asarray(Hs)
+        # mixed policies store the shards low-precision (fp32 policies
+        # take the historical no-cast path)
+        sd = self.policy.storage_dtype if self.policy.mixed else None
+        self.Ws = jnp.asarray(Ws, dtype=sd)
+        self.Hs = jnp.asarray(Hs, dtype=sd)
         if self.mesh is not None:
             sh = NamedSharding(self.mesh, P(self.mesh.axis_names[0]))
             self.Ws = jax.device_put(self.Ws, sh)
             self.Hs = jax.device_put(self.Hs, sh)
 
     def run_epoch(self):
-        lr = jnp.asarray(self.stepsize(self.epoch_idx), dtype=self.Ws.dtype)
+        # the update accumulates in compute_dtype under a mixed policy,
+        # so lr must be materialized there (a bf16-rounded lr would leak
+        # storage precision into the fp32 accumulation)
+        lr = jnp.asarray(self.stepsize(self.epoch_idx),
+                         dtype=self.policy.compute_dtype or self.Ws.dtype)
         lam = self.lam
         if self.mesh is None:
             rows, cols, vals, mask = self._cell_data()
@@ -692,7 +706,8 @@ class NomadRingEngine:
         while done < epochs:
             c = min(block, epochs - done)
             lrs = jnp.asarray(values(self.epoch_idx, c),
-                              dtype=self.Ws.dtype)
+                              dtype=self.policy.compute_dtype
+                              or self.Ws.dtype)
             chunk_recs = [i for i in recs if done < i <= done + c]
             pos = np.full(c, -1, dtype=np.int32)
             for j, i in enumerate(chunk_recs):

@@ -47,8 +47,15 @@ LANE = 128
 
 
 def _kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
-            W_in_ref, H_in_ref, W_ref, H_ref):
-    """One grid step: apply a chunk of sequential SGD updates in VMEM."""
+            W_in_ref, H_in_ref, W_ref, H_ref, *, accum_fp32=False):
+    """One grid step: apply a chunk of sequential SGD updates in VMEM.
+
+    With ``accum_fp32`` the factor refs hold a low-precision storage
+    dtype; each update gathers the two rows, upcasts to fp32, runs the
+    SGD step in fp32 (lr/lam/vals arrive fp32 from the host wrapper) and
+    downcasts back on scatter — one rounding per touched row per update,
+    matching the :mod:`..kernels.ref` ``compute_dtype`` contract.
+    """
     step = pl.program_id(0)
     lr = scalars_ref[0]
     lam = scalars_ref[1]
@@ -61,6 +68,7 @@ def _kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
         H_ref[...] = H_in_ref[...]
 
     chunk = rows_ref.shape[0]
+    sd = W_ref.dtype
 
     def body(t, _):
         i = rows_ref[t]
@@ -69,11 +77,14 @@ def _kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
         m = mask_ref[t]
         w = W_ref[i, :]
         h = H_ref[j, :]
+        if accum_fp32:
+            w = w.astype(jnp.float32)
+            h = h.astype(jnp.float32)
         err = a - jnp.sum(w * h)
         w_new = w - lr * (-err * h + lam * w)
         h_new = h - lr * (-err * w + lam * h)
-        W_ref[i, :] = jnp.where(m, w_new, w)
-        H_ref[j, :] = jnp.where(m, h_new, h)
+        W_ref[i, :] = jnp.where(m, w_new, w).astype(sd)
+        H_ref[j, :] = jnp.where(m, h_new, h).astype(sd)
         return 0
 
     jax.lax.fori_loop(0, chunk, body, 0, unroll=False)
@@ -81,19 +92,23 @@ def _kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("chunk", "interpret"))
+    static_argnames=("chunk", "interpret", "accum_fp32"))
 def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
-                    chunk: int = 1024, interpret: bool = True):
+                    chunk: int = 1024, interpret: bool = True,
+                    accum_fp32: bool = False):
     """Pallas-accelerated NOMAD block update.  Same contract as
     :func:`repro.kernels.ref.block_sgd_ref`.
 
     ``interpret=True`` (default here) runs the kernel body in Python on CPU
     — the validation mode for this repo; on real TPU pass ``False``.
+    ``accum_fp32`` enables the mixed-precision path (fp32 accumulation
+    over low-precision factor storage); ``False`` is bitwise-historical.
     """
     m_tile, k = W.shape
     n_tile = H.shape[0]
     nnz = rows.shape[0]
     dtype = W.dtype
+    cdtype = jnp.float32 if accum_fp32 else dtype
 
     # pad k to the 128-lane register width (zeros are SGD-invariant: see
     # module docstring); pad nnz to a chunk multiple with masked no-ops.
@@ -103,11 +118,11 @@ def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
     Hp = jnp.pad(H, ((0, 0), (0, k_pad)))
     rows_p = jnp.pad(rows.astype(jnp.int32), (0, nnz_pad))
     cols_p = jnp.pad(cols.astype(jnp.int32), (0, nnz_pad))
-    vals_p = jnp.pad(vals.astype(dtype), (0, nnz_pad))
+    vals_p = jnp.pad(vals.astype(cdtype), (0, nnz_pad))
     mask_p = jnp.pad(mask.astype(jnp.bool_), (0, nnz_pad))
     n_chunks = max(1, (nnz + nnz_pad) // chunk)
 
-    scalars = jnp.array([lr, lam], dtype=dtype)
+    scalars = jnp.array([lr, lam], dtype=cdtype)
     kp = k + k_pad
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -129,7 +144,7 @@ def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
     )
 
     W_out, H_out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, accum_fp32=accum_fp32),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((m_tile, kp), dtype),
@@ -143,7 +158,7 @@ def nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam, *,
 
 
 def _wave_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
-                 W_in_ref, H_in_ref, W_ref, H_ref):
+                 W_in_ref, H_in_ref, W_ref, H_ref, *, accum_fp32=False):
     """One grid step: apply a chunk of conflict-free waves in VMEM.
 
     rows/cols/vals/mask refs hold (wave_chunk, wave_width) — each row is
@@ -163,6 +178,7 @@ def _wave_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
     n_waves = rows_ref.shape[0]
     m_tile = W_ref.shape[0]
     n_tile = H_ref.shape[0]
+    cd = jnp.float32 if accum_fp32 else None
 
     def body(t, carry):
         W_all, H_all = carry
@@ -172,7 +188,8 @@ def _wave_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
         m = mask_ref[t, :]
         w = jnp.take(W_all, r, axis=0)          # (width, k) gather
         h = jnp.take(H_all, c, axis=0)
-        w_new, h_new = _ref.sgd_pair_batch(w, h, a, lr, lam)
+        w_new, h_new = _ref.sgd_pair_batch(w, h, a, lr, lam,
+                                           compute_dtype=cd)
         # padded lanes scatter out of bounds and are dropped; real lanes
         # are unique within the wave so the scatter is race-free
         W_all = W_all.at[jnp.where(m, r, m_tile)].set(w_new, mode="drop")
@@ -187,9 +204,10 @@ def _wave_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("wave_chunk", "interpret"))
+    static_argnames=("wave_chunk", "interpret", "accum_fp32"))
 def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
-                          wave_chunk: int = 8, interpret: bool = True):
+                          wave_chunk: int = 8, interpret: bool = True,
+                          accum_fp32: bool = False):
     """Pallas wave-vectorized NOMAD block update.  Same contract as
     :func:`repro.kernels.ref.block_sgd_waves`: rows/cols/vals/mask are
     (n_waves, wave_width) conflict-free wave layouts from
@@ -205,6 +223,7 @@ def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
     n_tile = H.shape[0]
     n_waves, wave_width = rows.shape
     dtype = W.dtype
+    cdtype = jnp.float32 if accum_fp32 else dtype
 
     k_pad = (-k) % LANE
     nw_pad = (-n_waves) % wave_chunk
@@ -212,11 +231,11 @@ def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
     Hp = jnp.pad(H, ((0, 0), (0, k_pad)))
     rows_p = jnp.pad(rows.astype(jnp.int32), ((0, nw_pad), (0, 0)))
     cols_p = jnp.pad(cols.astype(jnp.int32), ((0, nw_pad), (0, 0)))
-    vals_p = jnp.pad(vals.astype(dtype), ((0, nw_pad), (0, 0)))
+    vals_p = jnp.pad(vals.astype(cdtype), ((0, nw_pad), (0, 0)))
     mask_p = jnp.pad(mask.astype(jnp.bool_), ((0, nw_pad), (0, 0)))
     n_chunks = max(1, (n_waves + nw_pad) // wave_chunk)
 
-    scalars = jnp.array([lr, lam], dtype=dtype)
+    scalars = jnp.array([lr, lam], dtype=cdtype)
     kp = k + k_pad
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -238,7 +257,7 @@ def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
     )
 
     W_out, H_out = pl.pallas_call(
-        _wave_kernel,
+        functools.partial(_wave_kernel, accum_fp32=accum_fp32),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((m_tile, kp), dtype),
@@ -249,6 +268,128 @@ def nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam, *,
     )(scalars, rows_p, cols_p, vals_p, mask_p, Wp, Hp)
 
     return W_out[:, :k], H_out[:, :k]
+
+
+def _wave_grid_kernel(scalars_ref, rows_ref, cols_ref, vals_ref, mask_ref,
+                      W_in_ref, H_in_ref, W_ref, H_ref, *,
+                      accum_fp32=False):
+    """One (cell, wave-chunk) grid step of the occupancy grid kernel.
+
+    The grid is ``(p, n_chunks)``: dimension 0 walks the batch of
+    conflict-free cells (each cell owns disjoint W/H blocks, so the cell
+    axis is embarrassingly parallel — on GPU every cell maps to its own
+    block/SM; on TPU the last grid dim iterates innermost, so for a
+    fixed cell the factor blocks stay resident in VMEM across all its
+    wave chunks and are written back exactly once when the cell
+    advances).  All refs carry a leading length-1 cell axis from the
+    ``(1, ...)`` block shapes.
+    """
+    step = pl.program_id(1)
+    lr = scalars_ref[0]
+    lam = scalars_ref[1]
+
+    @pl.when(step == 0)
+    def _init():
+        W_ref[...] = W_in_ref[...]
+        H_ref[...] = H_in_ref[...]
+
+    wave_chunk = rows_ref.shape[1]
+    m_tile = W_ref.shape[1]
+    n_tile = H_ref.shape[1]
+    cd = jnp.float32 if accum_fp32 else None
+
+    def body(t, carry):
+        W_all, H_all = carry
+        r = rows_ref[0, t, :]
+        c = cols_ref[0, t, :]
+        a = vals_ref[0, t, :]
+        m = mask_ref[0, t, :]
+        w = jnp.take(W_all, r, axis=0)          # coalesced (width, k)
+        h = jnp.take(H_all, c, axis=0)
+        w_new, h_new = _ref.sgd_pair_batch(w, h, a, lr, lam,
+                                           compute_dtype=cd)
+        W_all = W_all.at[jnp.where(m, r, m_tile)].set(w_new, mode="drop")
+        H_all = H_all.at[jnp.where(m, c, n_tile)].set(h_new, mode="drop")
+        return W_all, H_all
+
+    W_all, H_all = jax.lax.fori_loop(
+        0, wave_chunk, body, (W_ref[0], H_ref[0]), unroll=False)
+    W_ref[0] = W_all
+    H_ref[0] = H_all
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("wave_chunk", "interpret", "accum_fp32"))
+def nomad_sgd_waves_grid(Ws, Hs, rows, cols, vals, mask, lr, lam, *,
+                         wave_chunk: int = 8, interpret: bool = True,
+                         accum_fp32: bool = False):
+    """Occupancy-oriented grid formulation of the wave kernel: one
+    ``pallas_call`` updates a whole batch of conflict-free cells.
+
+    Ws: (p, m_tile, k)  Hs: (p, n_tile, k); rows/cols/vals/mask:
+    (p, n_waves, wave_width) — the ``p`` cells of one schedule step,
+    whose W shards and H blocks are pairwise disjoint (the
+    generalized-diagonal invariant), batched along a leading axis.
+
+    Where :func:`nomad_sgd_waves_block` launches one program per cell
+    (the engine ``vmap``s it over the step axis), here the *grid* is
+    ``(p, n_chunks)``: cells fill the accelerator's parallel dimension
+    (occupancy scales with p instead of 1 program), and each cell's
+    wave stream is cut into VMEM-sized chunks along the inner grid
+    dimension with the factor blocks resident across chunks.  Per-cell
+    semantics are identical to ``nomad_sgd_waves_block`` — same gather
+    -> ``sgd_pair_batch`` -> drop-scatter per wave, same wave order —
+    asserted bitwise in tests/test_kernels.py.
+    """
+    p, m_tile, k = Ws.shape
+    n_tile = Hs.shape[1]
+    _, n_waves, wave_width = rows.shape
+    dtype = Ws.dtype
+    cdtype = jnp.float32 if accum_fp32 else dtype
+
+    k_pad = (-k) % LANE
+    nw_pad = (-n_waves) % wave_chunk
+    Wp = jnp.pad(Ws, ((0, 0), (0, 0), (0, k_pad)))
+    Hp = jnp.pad(Hs, ((0, 0), (0, 0), (0, k_pad)))
+    rows_p = jnp.pad(rows.astype(jnp.int32), ((0, 0), (0, nw_pad), (0, 0)))
+    cols_p = jnp.pad(cols.astype(jnp.int32), ((0, 0), (0, nw_pad), (0, 0)))
+    vals_p = jnp.pad(vals.astype(cdtype), ((0, 0), (0, nw_pad), (0, 0)))
+    mask_p = jnp.pad(mask.astype(jnp.bool_), ((0, 0), (0, nw_pad), (0, 0)))
+    n_chunks = max(1, (n_waves + nw_pad) // wave_chunk)
+
+    scalars = jnp.array([lr, lam], dtype=cdtype)
+    kp = k + k_pad
+
+    rc_spec = pl.BlockSpec((1, wave_chunk, wave_width),
+                           lambda c, s: (c, s, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(p, n_chunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # scalars
+            rc_spec, rc_spec, rc_spec, rc_spec,
+            pl.BlockSpec((1, m_tile, kp), lambda c, s: (c, 0, 0)),
+            pl.BlockSpec((1, n_tile, kp), lambda c, s: (c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m_tile, kp), lambda c, s: (c, 0, 0)),
+            pl.BlockSpec((1, n_tile, kp), lambda c, s: (c, 0, 0)),
+        ],
+    )
+
+    W_out, H_out = pl.pallas_call(
+        functools.partial(_wave_grid_kernel, accum_fp32=accum_fp32),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((p, m_tile, kp), dtype),
+            jax.ShapeDtypeStruct((p, n_tile, kp), dtype),
+        ],
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(scalars, rows_p, cols_p, vals_p, mask_p, Wp, Hp)
+
+    return W_out[:, :, :k], H_out[:, :, :k]
 
 
 block_sgd_ref = _ref.block_sgd_ref  # re-export for convenience

@@ -4,6 +4,12 @@ Dispatch policy: the Pallas kernels target TPU; on any other backend they
 run in ``interpret=True`` mode (Python emulation — correct, slow).  The
 XLA fallbacks in :mod:`repro.kernels.ref` are used by the dry-run (Pallas
 does not lower on the CPU backend) and whenever ``impl='xla'``.
+
+Precision threads through here from :class:`KernelPolicy.dtype_policy`:
+``compute_dtype``/``accum_fp32`` select fp32 accumulation over
+low-precision factor storage.  With the default fp32 policy no cast is
+inserted anywhere — those paths stay bitwise-identical to the historical
+kernels (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -12,7 +18,8 @@ from typing import Optional, Union
 import jax
 
 from . import ref
-from .nomad_sgd import nomad_sgd_block, nomad_sgd_waves_block
+from .nomad_sgd import (nomad_sgd_block, nomad_sgd_waves_block,
+                        nomad_sgd_waves_grid)
 from .policy import KernelPolicy
 
 
@@ -20,23 +27,33 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def on_accelerator() -> bool:
+    """True on any accelerator backend (TPU or GPU) — the occupancy grid
+    kernel targets both; CPU keeps the single-program interpret path."""
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
+
 def _run_wave(W, H, rows, cols, vals, mask, lr, lam, policy):
-    return ref.block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam)
+    return ref.block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam,
+                               compute_dtype=policy.compute_dtype)
 
 
 def _run_wave_pallas(W, H, rows, cols, vals, mask, lr, lam, policy):
     return nomad_sgd_waves_block(W, H, rows, cols, vals, mask, lr, lam,
                                  wave_chunk=policy.wave_chunk,
-                                 interpret=not on_tpu())
+                                 interpret=not on_tpu(),
+                                 accum_fp32=policy.mixed)
 
 
 def _run_xla(W, H, rows, cols, vals, mask, lr, lam, policy):
-    return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam)
+    return ref.block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam,
+                             compute_dtype=policy.compute_dtype)
 
 
 def _run_pallas(W, H, rows, cols, vals, mask, lr, lam, policy):
     return nomad_sgd_block(W, H, rows, cols, vals, mask, lr, lam,
-                           chunk=policy.chunk, interpret=not on_tpu())
+                           chunk=policy.chunk, interpret=not on_tpu(),
+                           accum_fp32=policy.mixed)
 
 
 _DISPATCH = {
@@ -45,6 +62,18 @@ _DISPATCH = {
     "xla": _run_xla,
     "pallas": _run_pallas,
 }
+
+
+def _resolve(policy, impl, chunk, wave_chunk):
+    if policy is None:
+        policy = KernelPolicy(impl=impl, chunk=chunk, wave_chunk=wave_chunk)
+    elif isinstance(policy, str):
+        policy = KernelPolicy(impl=policy, chunk=chunk,
+                              wave_chunk=wave_chunk)
+    name = policy.impl
+    if name == "auto":
+        name = "pallas" if on_tpu() else "xla"
+    return policy, name
 
 
 def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *,
@@ -60,15 +89,36 @@ def block_sgd(W, H, rows, cols, vals, mask, lr, lam, *,
     layouts emitted by ``partition.pack`` (same serial ordering,
     vectorized execution — see DESIGN.md §3).
     """
-    if policy is None:
-        policy = KernelPolicy(impl=impl, chunk=chunk, wave_chunk=wave_chunk)
-    elif isinstance(policy, str):
-        policy = KernelPolicy(impl=policy, chunk=chunk,
-                              wave_chunk=wave_chunk)
-    name = policy.impl
-    if name == "auto":
-        name = "pallas" if on_tpu() else "xla"
+    policy, name = _resolve(policy, impl, chunk, wave_chunk)
     return _DISPATCH[name](W, H, rows, cols, vals, mask, lr, lam, policy)
+
+
+def block_sgd_cells(Ws, Hs, rows, cols, vals, mask, lr, lam, *,
+                    policy: KernelPolicy):
+    """One schedule step's batch of cell updates: ``Ws``/``Hs`` are
+    ``(p, m_tile, k)``/``(p, n_tile, k)`` and the rating arrays carry a
+    matching leading cell axis.  The cells of a step touch pairwise
+    disjoint factor blocks (the generalized-diagonal invariant), so the
+    batch axis is free parallelism.
+
+    For ``impl='wave_pallas'`` on an accelerator (or when
+    ``policy.block_rows`` forces it), the whole batch is one
+    ``pallas_call`` with grid ``(p, n_chunks)`` —
+    :func:`~.nomad_sgd.nomad_sgd_waves_grid` — so occupancy scales with
+    the cell count instead of relying on ``vmap``-of-kernel.  Every
+    other impl (and the CPU/interpret fallback) keeps the historical
+    ``vmap`` over :func:`block_sgd`, which is bitwise-identical.
+    """
+    if policy.impl == "wave_pallas" and policy.wants_grid(
+            int(Ws.shape[1]), int(Hs.shape[1])):
+        return nomad_sgd_waves_grid(
+            Ws, Hs, rows, cols, vals, mask, lr, lam,
+            wave_chunk=policy.wave_chunk, interpret=not on_tpu(),
+            accum_fp32=policy.mixed)
+    return jax.vmap(
+        lambda W, H, r, c, v, m: block_sgd(W, H, r, c, v, m, lr, lam,
+                                           policy=policy)
+    )(Ws, Hs, rows, cols, vals, mask)
 
 
 def flash_attention(q, k, v, *, causal=True, impl: str = "auto",

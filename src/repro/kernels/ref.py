@@ -5,6 +5,12 @@ sequential SGD over the ratings of one (worker, item-block) cell, exactly
 Algorithm 1 lines 16-21 restricted to the cell.  Every other implementation
 (Pallas kernel, SPMD ring engine, discrete-event simulator) is validated
 against it.
+
+Every oracle takes ``compute_dtype=None``: ``None`` runs the historical
+path — every op in the storage dtype, bitwise-stable across PRs — while
+an explicit dtype (fp32 under ``KernelPolicy.dtype_policy='bf16'``)
+gathers rows, upcasts, accumulates the update in that dtype and
+downcasts on scatter (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -12,29 +18,40 @@ import jax
 import jax.numpy as jnp
 
 
-def sgd_pair(w, h, a, lr, lam):
+def sgd_pair(w, h, a, lr, lam, compute_dtype=None):
+    if compute_dtype is not None:
+        sd = w.dtype
+        wn, hn = sgd_pair(w.astype(compute_dtype),
+                          h.astype(compute_dtype),
+                          jnp.asarray(a, compute_dtype),
+                          jnp.asarray(lr, compute_dtype),
+                          jnp.asarray(lam, compute_dtype))
+        return wn.astype(sd), hn.astype(sd)
     err = a - jnp.dot(w, h)
     w_new = w - lr * (-err * h + lam * w)
     h_new = h - lr * (-err * w + lam * h)
     return w_new, h_new
 
 
-def block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam):
+def block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam,
+                  compute_dtype=None):
     """Sequential masked SGD over a padded rating list.
 
     W: (m_tile, k)  H: (n_tile, k)  rows/cols: (nnz,) int32 into the tiles,
     vals/mask: (nnz,).  Padded entries (mask=False) are exact no-ops.
     Returns updated (W, H).
     """
-    lr = jnp.asarray(lr, dtype=W.dtype)
-    lam = jnp.asarray(lam, dtype=W.dtype)
+    cd = compute_dtype if compute_dtype is not None else W.dtype
+    lr = jnp.asarray(lr, dtype=cd)
+    lam = jnp.asarray(lam, dtype=cd)
 
     def body(carry, x):
         W, H = carry
         i, j, a, m = x
         w = W[i]
         h = H[j]
-        w_new, h_new = sgd_pair(w, h, a, lr, lam)
+        w_new, h_new = sgd_pair(w, h, a, lr, lam,
+                                compute_dtype=compute_dtype)
         w = jnp.where(m, w_new, w)
         h = jnp.where(m, h_new, h)
         return (W.at[i].set(w), H.at[j].set(h)), ()
@@ -42,11 +59,11 @@ def block_sgd_ref(W, H, rows, cols, vals, mask, lr, lam):
     (W, H), _ = jax.lax.scan(
         body, (W, H),
         (rows.astype(jnp.int32), cols.astype(jnp.int32),
-         vals.astype(W.dtype), mask))
+         vals.astype(cd), mask))
     return W, H
 
 
-def sgd_pair_batch(w, h, a, lr, lam):
+def sgd_pair_batch(w, h, a, lr, lam, compute_dtype=None):
     """Batched :func:`sgd_pair` over a leading wave axis.
 
     w/h: (width, k), a: (width,).  Valid only when the rows of ``w`` (and
@@ -54,13 +71,21 @@ def sgd_pair_batch(w, h, a, lr, lam):
     conflict-free wave — in which case the batch is exactly equivalent to
     applying :func:`sgd_pair` sequentially in any order.
     """
+    if compute_dtype is not None:
+        sd = w.dtype
+        wn, hn = sgd_pair_batch(
+            w.astype(compute_dtype), h.astype(compute_dtype),
+            jnp.asarray(a, compute_dtype), jnp.asarray(lr, compute_dtype),
+            jnp.asarray(lam, compute_dtype))
+        return wn.astype(sd), hn.astype(sd)
     err = a - jnp.sum(w * h, axis=-1)
     w_new = w - lr * (-err[:, None] * h + lam * w)
     h_new = h - lr * (-err[:, None] * w + lam * h)
     return w_new, h_new
 
 
-def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam):
+def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam,
+                    compute_dtype=None):
     """Wave-vectorized NOMAD block update (same math as
     :func:`block_sgd_ref`, executed ~wave_width updates at a time).
 
@@ -71,8 +96,9 @@ def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam):
     is exactly a sequential execution of the wave.  Padded entries
     (mask=False) scatter to an out-of-bounds index and are dropped.
     """
-    lr = jnp.asarray(lr, dtype=W.dtype)
-    lam = jnp.asarray(lam, dtype=W.dtype)
+    cd = compute_dtype if compute_dtype is not None else W.dtype
+    lr = jnp.asarray(lr, dtype=cd)
+    lam = jnp.asarray(lam, dtype=cd)
     m_tile = W.shape[0]
     n_tile = H.shape[0]
 
@@ -81,7 +107,8 @@ def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam):
         r, c, a, m = x
         w = W[r]                       # (width, k) vectorized gather
         h = H[c]
-        w_new, h_new = sgd_pair_batch(w, h, a, lr, lam)
+        w_new, h_new = sgd_pair_batch(w, h, a, lr, lam,
+                                      compute_dtype=compute_dtype)
         safe_r = jnp.where(m, r, m_tile)   # OOB => dropped by scatter
         safe_c = jnp.where(m, c, n_tile)
         W = W.at[safe_r].set(w_new, mode="drop")
@@ -91,7 +118,7 @@ def block_sgd_waves(W, H, rows, cols, vals, mask, lr, lam):
     (W, H), _ = jax.lax.scan(
         body, (W, H),
         (rows.astype(jnp.int32), cols.astype(jnp.int32),
-         vals.astype(W.dtype), mask))
+         vals.astype(cd), mask))
     return W, H
 
 

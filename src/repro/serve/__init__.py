@@ -10,10 +10,11 @@
   request front end; boots from a ``save_fit_result`` checkpoint.
 """
 from .server import Recommendation, RecServer, ServeConfig
-from .store import FactorStore, FactorView
-from .topk import topk_dense_oracle, topk_scores
+from .store import FactorStore, FactorView, quantize_int8
+from .topk import topk_dense_oracle, topk_scores, topk_scores_filtered
 
 __all__ = [
     "FactorStore", "FactorView", "Recommendation", "RecServer",
-    "ServeConfig", "topk_dense_oracle", "topk_scores",
+    "ServeConfig", "quantize_int8", "topk_dense_oracle", "topk_scores",
+    "topk_scores_filtered",
 ]

@@ -34,7 +34,7 @@ import numpy as np
 
 from ..kernels.policy import KernelPolicy
 from .store import FactorStore, FactorView
-from .topk import topk_scores
+from .topk import topk_scores, topk_scores_filtered
 
 __all__ = ["ServeConfig", "Recommendation", "RecServer"]
 
@@ -44,19 +44,25 @@ class ServeConfig:
     """Serving-tier knobs (frozen; validated at construction, like the
     solver configs).
 
-    top_k       -- recommendation list length per user
-    max_batch   -- microbatch user cap
-    max_wait_ms -- how long the worker holds the first request of a
-                   batch open for stragglers (0 = score immediately)
-    item_tile   -- catalog tile width the scorer streams over
-    kernel      -- KernelPolicy / legacy impl string; ``serve_impl``
-                   selects the XLA or Pallas top-k path
+    top_k        -- recommendation list length per user
+    max_batch    -- microbatch user cap
+    max_wait_ms  -- how long the worker holds the first request of a
+                    batch open for stragglers (0 = score immediately)
+    item_tile    -- catalog tile width the scorer streams over
+    kernel       -- KernelPolicy / legacy impl string; ``serve_impl``
+                    selects the XLA or Pallas top-k path
+    filter_rated -- exclude each user's already-rated items (the
+                    published version's ``rated_indptr`` CSR map) from
+                    the results, exactly; users with no map entry are
+                    unfiltered.  Lists short of ``top_k`` admissible
+                    items pad with item id -1 / -inf score.
     """
     top_k: int = 10
     max_batch: int = 64
     max_wait_ms: float = 2.0
     item_tile: int = 4096
     kernel: Union[str, KernelPolicy] = "auto"
+    filter_rated: bool = False
 
     def __post_init__(self):
         if self.top_k < 1:
@@ -126,12 +132,33 @@ class RecServer:
             bucket *= 2
         rows_p = np.pad(rows, (0, bucket - B))      # row 0 repeats: dropped
         W_u = jnp.take(view.W, jnp.asarray(rows_p, jnp.int32), axis=0)
+        h_scale = None
+        if view.quantized:
+            # dequantize the gathered user rows (B x k — cheap); H stays
+            # int8 on device, its scale is applied per score in-kernel
+            W_u = (W_u.astype(jnp.float32)
+                   * jnp.take(view.w_scale,
+                              jnp.asarray(rows_p, jnp.int32))[:, None])
+            h_scale = view.h_scale
         k_top = min(cfg.top_k, view.n)
-        scores, item_rows = topk_scores(W_u, view.H, k_top,
-                                        policy=cfg.kernel,
-                                        item_tile=cfg.item_tile)
+        if cfg.filter_rated and view.rated_indptr is not None:
+            scores, item_rows = topk_scores_filtered(
+                W_u, view.H, k_top, exclude=view.rated_for(rows_p),
+                policy=cfg.kernel, item_tile=cfg.item_tile,
+                h_scale=h_scale)
+        else:
+            scores, item_rows = topk_scores(W_u, view.H, k_top,
+                                            policy=cfg.kernel,
+                                            item_tile=cfg.item_tile,
+                                            h_scale=h_scale)
         scores = np.asarray(scores)[:B]
-        items = view.item_catalog(np.asarray(item_rows)[:B])
+        item_rows = np.asarray(item_rows)[:B]
+        # the filtered path pads exhausted rows with the sentinel n —
+        # surface those as external id -1 rather than indexing the
+        # catalog out of bounds
+        sent = item_rows >= view.n
+        items = np.where(sent, -1,
+                         view.item_catalog(np.where(sent, 0, item_rows)))
         return Recommendation(users=users, items=items, scores=scores,
                               version=view.version)
 

@@ -42,7 +42,19 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FactorView", "FactorStore"]
+__all__ = ["FactorView", "FactorStore", "quantize_int8"]
+
+
+def quantize_int8(A):
+    """Per-row symmetric absmax int8 quantization: ``A ~= q * scale[:,
+    None]`` with ``q`` int8 in [-127, 127] and ``scale`` f32.  All-zero
+    rows get scale 1 (their q is all-zero anyway), so dequantization
+    never divides by or multiplies with a zero scale."""
+    A = np.asarray(jnp.asarray(A).astype(jnp.float32))
+    absmax = np.max(np.abs(A), axis=1)
+    scale = np.where(absmax == 0, 1.0, absmax / 127.0).astype(np.float32)
+    q = np.clip(np.rint(A / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +65,42 @@ class FactorView:
     every query on this version).  ``user_ids``/``item_ids`` map factor
     rows to external catalog ids; ``None`` means the identity (external
     id == row), which append-only ``ProblemDelta`` growth preserves.
+
+    Optional per-version payloads (both versioned for the same reason as
+    the catalog maps — they describe exactly this version's shapes):
+
+    * ``w_scale``/``h_scale`` — per-row dequantization scales when the
+      version was published with ``quantize='int8'`` (``W``/``H`` then
+      hold int8 rows and ``row * scale[row]`` reconstructs the f32
+      approximation);
+    * ``rated_indptr``/``rated_items`` — a CSR map of the items each
+      user row had already rated at publish time, consumed by the exact
+      candidate filter (``topk_scores_filtered``).
     """
     version: int
     W: jnp.ndarray                      # (m, k) user factors
     H: jnp.ndarray                      # (n, k) item factors
     user_ids: Optional[np.ndarray] = None   # (m,) row -> external user id
     item_ids: Optional[np.ndarray] = None   # (n,) row -> external item id
+    w_scale: Optional[jnp.ndarray] = None   # (m,) int8 dequant scales
+    h_scale: Optional[jnp.ndarray] = None   # (n,) int8 dequant scales
+    rated_indptr: Optional[np.ndarray] = None   # (m + 1,) CSR offsets
+    rated_items: Optional[np.ndarray] = None    # (total_nnz,) item rows
+
+    @property
+    def quantized(self) -> bool:
+        return self.w_scale is not None
+
+    def rated_for(self, rows) -> list:
+        """Item rows already rated by each of ``rows`` (factor-row
+        indices) under this version's rated map — empty arrays when no
+        map was published."""
+        rows = np.atleast_1d(np.asarray(rows, dtype=np.int64))
+        if self.rated_indptr is None:
+            empty = np.zeros(0, dtype=np.int64)
+            return [empty for _ in rows]
+        ptr, items = self.rated_indptr, self.rated_items
+        return [items[ptr[r]: ptr[r + 1]] for r in rows]
 
     @property
     def m(self) -> int:
@@ -116,6 +158,34 @@ class FactorView:
             order = np.argsort(self.user_ids, kind="stable")
             object.__setattr__(self, "_user_order", order)
             object.__setattr__(self, "_user_sorted", self.user_ids[order])
+        if (self.w_scale is None) != (self.h_scale is None):
+            raise ValueError(
+                "w_scale and h_scale must be published together")
+        for name, want in (("w_scale", self.m), ("h_scale", self.n)):
+            sc = getattr(self, name)
+            if sc is not None and tuple(sc.shape) != (want,):
+                raise ValueError(
+                    f"{name} must have shape ({want},), got "
+                    f"{tuple(sc.shape)}")
+        if (self.rated_indptr is None) != (self.rated_items is None):
+            raise ValueError(
+                "rated_indptr and rated_items must be published together")
+        if self.rated_indptr is not None:
+            ptr = np.asarray(self.rated_indptr, dtype=np.int64)
+            items = np.asarray(self.rated_items, dtype=np.int64)
+            if ptr.shape != (self.m + 1,):
+                raise ValueError(
+                    f"rated_indptr must have shape ({self.m + 1},), got "
+                    f"{ptr.shape}")
+            if np.any(np.diff(ptr) < 0) or ptr[0] != 0 \
+                    or ptr[-1] != len(items):
+                raise ValueError("rated_indptr is not a valid CSR offset "
+                                 "array for rated_items")
+            if len(items) and (items.min() < 0 or items.max() >= self.n):
+                raise ValueError(
+                    f"rated_items contains rows outside [0, {self.n})")
+            object.__setattr__(self, "rated_indptr", ptr)
+            object.__setattr__(self, "rated_items", items)
 
 
 class FactorStore:
@@ -136,28 +206,80 @@ class FactorStore:
     # Writer side                                                        #
     # ----------------------------------------------------------------- #
 
-    def publish(self, W, H, *, user_ids=None, item_ids=None) -> FactorView:
+    def publish(self, W, H, *, user_ids=None, item_ids=None,
+                quantize: Optional[str] = None,
+                rated=None) -> FactorView:
         """Stage ``(W, H)`` as the next version and swap it live.  The
         arrays are uploaded to device here, once, so queries never pay
-        the transfer.  Returns the published view."""
+        the transfer.  Returns the published view.
+
+        ``quantize='int8'`` stores the factors as per-row-absmax int8
+        with f32 dequantization scales (``w_scale``/``h_scale``) — 4x
+        smaller device residency for the serving tier, with the bounded
+        score error pinned in tests/test_tolerance.py.  ``rated`` is an
+        optional ``(user_rows, item_rows)`` COO pair of already-rated
+        coordinates; it is compiled to the per-version CSR map the exact
+        candidate filter consumes."""
+        if quantize not in (None, "int8"):
+            raise ValueError(
+                f"quantize must be None or 'int8', got {quantize!r}")
+        w_scale = h_scale = None
+        if quantize == "int8":
+            Wq, w_scale = quantize_int8(W)
+            Hq, h_scale = quantize_int8(H)
+            W, H = Wq, Hq
+            w_scale = jnp.asarray(w_scale)
+            h_scale = jnp.asarray(h_scale)
         W = jnp.asarray(W)
         H = jnp.asarray(H)
         if W.ndim != 2 or H.ndim != 2 or W.shape[1] != H.shape[1]:
             raise ValueError(
                 f"W and H must be (m, k)/(n, k) with one k, got "
                 f"{W.shape}/{H.shape}")
+        rated_indptr = rated_items = None
+        if rated is not None:
+            u_rows = np.asarray(rated[0], dtype=np.int64)
+            i_rows = np.asarray(rated[1], dtype=np.int64)
+            if u_rows.shape != i_rows.shape:
+                raise ValueError(
+                    f"rated user/item arrays must match: "
+                    f"{u_rows.shape} vs {i_rows.shape}")
+            m = int(W.shape[0])
+            order = np.lexsort((i_rows, u_rows))
+            u_rows, i_rows = u_rows[order], i_rows[order]
+            rated_indptr = np.zeros(m + 1, dtype=np.int64)
+            np.add.at(rated_indptr, u_rows + 1, 1)
+            rated_indptr = np.cumsum(rated_indptr)
+            rated_items = i_rows
         with self._lock:
             version = 0 if self._view is None else self._view.version + 1
             view = FactorView(version=version, W=W, H=H,
-                              user_ids=user_ids, item_ids=item_ids)
+                              user_ids=user_ids, item_ids=item_ids,
+                              w_scale=w_scale, h_scale=h_scale,
+                              rated_indptr=rated_indptr,
+                              rated_items=rated_items)
             self._buffers[version % 2] = view
             self._view = view           # the atomic swap readers observe
         return view
 
-    def publish_result(self, result) -> FactorView:
+    def publish_result(self, result, *, quantize: Optional[str] = None,
+                       rated="auto") -> FactorView:
         """Publish a ``FitResult``'s factors (a ``solve`` /
-        ``partial_fit`` / session round output)."""
-        return self.publish(result.W, result.H)
+        ``partial_fit`` / session round output).
+
+        ``rated="auto"`` (default) publishes the rated-item map from the
+        training problem the result carries (``extras["problem"]``, set
+        by ``partial_fit`` chains) when one is present — so a store
+        attached to a ``StreamingSession`` filters against exactly the
+        ratings each published version was trained on; pass ``None`` to
+        skip the map, or an explicit ``(user_rows, item_rows)`` pair /
+        ``MCProblem`` to override."""
+        if rated == "auto":
+            rated = result.extras.get("problem")
+        if rated is not None and hasattr(rated, "rows"):
+            rated = (rated.rows, rated.cols)    # an MCProblem
+        return self.publish(result.W, result.H, quantize=quantize,
+                            rated=rated)
 
     def attach(self, session):
         """Subscribe to a :class:`repro.api.StreamingSession`: every

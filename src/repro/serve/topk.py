@@ -54,19 +54,28 @@ from ..kernels.policy import KernelPolicy
 
 LANE = 128
 
-__all__ = ["topk_scores", "topk_dense_oracle"]
+__all__ = ["topk_scores", "topk_scores_filtered", "topk_dense_oracle"]
 
 
-def topk_dense_oracle(W_u, H, k_top: int):
+def topk_dense_oracle(W_u, H, k_top: int, h_scale=None):
     """Dense reference: materialize ``W_u @ H.T`` and stably argsort.
 
     Scores use the same jnp matmul as the tiled paths (selection must be
     the only thing that differs); the ordering is an independent host
     ``np.argsort(-scores, kind="stable")``, i.e. score-descending with
-    ties broken by smaller item id.  Returns ``(scores, ids)`` of shape
-    ``(U, k_top)``.
+    ties broken by smaller item id.  With ``h_scale`` (int8-quantized
+    serving) the per-item dequantization scale multiplies the raw score
+    *after* the dot — the same scale-after-sum order the tiled scorers
+    use, which is what makes oracle-vs-tiled exact rather than merely
+    close.  Returns ``(scores, ids)`` of shape ``(U, k_top)``.
     """
-    scores = np.asarray(jnp.asarray(W_u) @ jnp.asarray(H).T)
+    Hm = jnp.asarray(H)
+    W_u = jnp.asarray(W_u)
+    if h_scale is not None:
+        scores = np.asarray((W_u @ Hm.astype(W_u.dtype).T)
+                            * jnp.asarray(h_scale)[None, :])
+    else:
+        scores = np.asarray(W_u @ Hm.T)
     order = np.argsort(-scores, axis=1, kind="stable")[:, :k_top]
     return np.take_along_axis(scores, order, axis=1), \
         order.astype(np.int32)
@@ -74,7 +83,7 @@ def topk_dense_oracle(W_u, H, k_top: int):
 
 def topk_scores(W_u, H, k_top: int, *,
                 policy: KernelPolicy | str | None = None,
-                item_tile: int = 4096):
+                item_tile: int = 4096, h_scale=None):
     """Top-``k_top`` items for a batch of user factor rows.
 
     W_u       -- (U, k_rank) gathered user factors
@@ -83,6 +92,9 @@ def topk_scores(W_u, H, k_top: int, *,
     policy    -- KernelPolicy (or legacy impl string); ``serve_impl``
                  picks the XLA or Pallas tile scorer
     item_tile -- catalog tile width the scorer streams over
+    h_scale   -- optional (n_items,) per-row dequantization scales for
+                 an int8-quantized ``H`` (``FactorView.h_scale``):
+                 scores become ``(W_u @ Hq.T) * h_scale``
 
     Returns ``(scores, ids)`` — both ``(U, k_top)``, score-descending,
     ties by smaller id; exact vs. :func:`topk_dense_oracle`.
@@ -100,9 +112,52 @@ def topk_scores(W_u, H, k_top: int, *,
             f"k={H.shape[-1]}")
     if policy.serve_impl == "pallas":
         from ..kernels.ops import on_tpu
-        return _topk_pallas(W_u, H, k_top=k_top, item_tile=item_tile,
-                            interpret=not on_tpu())
-    return _topk_xla(W_u, H, k_top=k_top, item_tile=item_tile)
+        return _topk_pallas(W_u, H, h_scale, k_top=k_top,
+                            item_tile=item_tile, interpret=not on_tpu())
+    return _topk_xla(W_u, H, h_scale, k_top=k_top, item_tile=item_tile)
+
+
+def topk_scores_filtered(W_u, H, k_top: int, *, exclude,
+                         policy: KernelPolicy | str | None = None,
+                         item_tile: int = 4096, h_scale=None):
+    """:func:`topk_scores` with exact per-user candidate filtering:
+    ``exclude[u]`` is an array of item rows user ``u`` must not be
+    recommended (typically ``FactorView.rated_for`` — the already-rated
+    items of the published version).
+
+    Exactness by over-fetch: the scorer retrieves
+    ``min(n, k_top + max_u |exclude[u]|)`` candidates — enough that
+    even a user whose entire exclusion set lands in the prefix still
+    has ``k_top`` admissible items below it — then drops each user's
+    excluded ids on the host and keeps the first ``k_top``.  The
+    surviving candidates are in exactly the total order (score desc, id
+    asc) of the unfiltered scorer, so the result equals a dense oracle
+    over the filtered catalog (asserted with engineered ties in
+    tests/test_serve.py).  Users with fewer than ``k_top`` admissible
+    items pad the tail with the sentinel id ``n`` and ``-inf`` score.
+    """
+    n = int(H.shape[0])
+    U = int(W_u.shape[0])
+    exclude = list(exclude)
+    if len(exclude) > U:
+        raise ValueError(
+            f"exclude has {len(exclude)} entries for {U} users")
+    max_ex = max((len(e) for e in exclude), default=0)
+    kk = min(n, k_top + max_ex)
+    s, ids = topk_scores(W_u, H, kk, policy=policy, item_tile=item_tile,
+                         h_scale=h_scale)
+    s = np.asarray(s)
+    ids = np.asarray(ids)
+    out_s = np.full((U, k_top), -np.inf, dtype=s.dtype)
+    out_i = np.full((U, k_top), n, dtype=np.int32)
+    for u in range(U):
+        ex = (np.asarray(exclude[u], dtype=np.int64)
+              if u < len(exclude) else np.zeros(0, np.int64))
+        keep = ~np.isin(ids[u], ex) & (ids[u] < n)
+        sel = np.flatnonzero(keep)[:k_top]
+        out_s[u, : len(sel)] = s[u, sel]
+        out_i[u, : len(sel)] = ids[u, sel]
+    return out_s, out_i
 
 
 # --------------------------------------------------------------------- #
@@ -110,7 +165,7 @@ def topk_scores(W_u, H, k_top: int, *,
 # --------------------------------------------------------------------- #
 
 @functools.partial(jax.jit, static_argnames=("k_top", "item_tile"))
-def _topk_xla(W_u, H, *, k_top: int, item_tile: int):
+def _topk_xla(W_u, H, h_scale, *, k_top: int, item_tile: int):
     U, _ = W_u.shape
     n = H.shape[0]
     T = min(item_tile, max(n, 1))
@@ -119,11 +174,21 @@ def _topk_xla(W_u, H, *, k_top: int, item_tile: int):
     tiles = Hp.reshape(n_tiles, T, -1)
     bases = (jnp.arange(n_tiles, dtype=jnp.int32) * T)
     kk = min(k_top, T)
+    if h_scale is not None:
+        # padding scale 1.0 — padded scores are masked to -inf anyway
+        hs_tiles = jnp.pad(jnp.asarray(h_scale), (0, n_tiles * T - n),
+                           constant_values=1.0).reshape(n_tiles, T)
+    else:
+        hs_tiles = None
 
     def body(carry, xs):
         run_s, run_i = carry
-        tile, base = xs
-        scores = W_u @ tile.T                           # (U, T)
+        if hs_tiles is not None:
+            tile, base, hs = xs
+            scores = (W_u @ tile.astype(W_u.dtype).T) * hs[None, :]
+        else:
+            tile, base = xs
+            scores = W_u @ tile.T                       # (U, T)
         ids = base + jnp.arange(T, dtype=jnp.int32)
         # catalog padding (and any genuine -inf score) parks on the
         # sentinel id n, which sorts after every real item
@@ -141,7 +206,8 @@ def _topk_xla(W_u, H, *, k_top: int, item_tile: int):
 
     init = (jnp.full((U, k_top), -jnp.inf, W_u.dtype),
             jnp.full((U, k_top), n, jnp.int32))
-    (out_s, out_i), _ = jax.lax.scan(body, init, (tiles, bases))
+    xs = (tiles, bases) if hs_tiles is None else (tiles, bases, hs_tiles)
+    (out_s, out_i), _ = jax.lax.scan(body, init, xs)
     return out_s, out_i.astype(jnp.int32)
 
 
@@ -170,8 +236,13 @@ def _select_topk(cat_s, cat_i, k_top: int, sentinel):
     return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _topk_kernel(scalars_ref, Wu_ref, Ht_ref, s_ref, i_ref, *,
-                 k_top: int, tile: int):
+def _topk_kernel(scalars_ref, Wu_ref, Ht_ref, *rest, k_top: int,
+                 tile: int, scaled: bool = False):
+    if scaled:
+        hs_ref, s_ref, i_ref = rest
+    else:
+        hs_ref = None
+        s_ref, i_ref = rest
     step = pl.program_id(0)
     n = scalars_ref[0]
 
@@ -181,8 +252,15 @@ def _topk_kernel(scalars_ref, Wu_ref, Ht_ref, s_ref, i_ref, *,
         i_ref[...] = jnp.full_like(i_ref[...], n)
 
     U = Wu_ref.shape[0]
-    scores = jnp.dot(Wu_ref[...], Ht_ref[...].T,
-                     preferred_element_type=s_ref.dtype)     # (U, T)
+    if scaled:
+        # int8 item tile: dequantize the *score* (one multiply per
+        # element, after the dot) instead of the tile (T x k multiplies)
+        scores = jnp.dot(Wu_ref[...], Ht_ref[...].astype(Wu_ref.dtype).T,
+                         preferred_element_type=s_ref.dtype)
+        scores = scores * hs_ref[...][None, :]
+    else:
+        scores = jnp.dot(Wu_ref[...], Ht_ref[...].T,
+                         preferred_element_type=s_ref.dtype)     # (U, T)
     ids = step * tile + jax.lax.broadcasted_iota(jnp.int32, (U, tile), 1)
     scores = jnp.where(ids < n, scores, -jnp.inf)
     ids = jnp.where(ids < n, ids, n)
@@ -196,7 +274,7 @@ def _topk_kernel(scalars_ref, Wu_ref, Ht_ref, s_ref, i_ref, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("k_top", "item_tile", "interpret"))
-def _topk_pallas(W_u, H, *, k_top: int, item_tile: int,
+def _topk_pallas(W_u, H, h_scale, *, k_top: int, item_tile: int,
                  interpret: bool = True):
     U, kr = W_u.shape
     n = H.shape[0]
@@ -207,15 +285,24 @@ def _topk_pallas(W_u, H, *, k_top: int, item_tile: int,
     Hp = jnp.pad(H, ((0, n_tiles * T - n), (0, k_pad)))
     scalars = jnp.array([n], jnp.int32)
     kp = kr + k_pad
+    scaled = h_scale is not None
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),            # scalars
+        pl.BlockSpec((U, kp), lambda s: (0, 0)),          # W_u resident
+        pl.BlockSpec((T, kp), lambda s: (s, 0)),          # H streamed
+    ]
+    operands = [scalars, Wp, Hp]
+    if scaled:
+        hs_p = jnp.pad(jnp.asarray(h_scale), (0, n_tiles * T - n),
+                       constant_values=1.0)
+        in_specs.append(pl.BlockSpec((T,), lambda s: (s,)))  # scales
+        operands.append(hs_p)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=0,
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),            # scalars
-            pl.BlockSpec((U, kp), lambda s: (0, 0)),          # W_u resident
-            pl.BlockSpec((T, kp), lambda s: (s, 0)),          # H streamed
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((U, k_top), lambda s: (0, 0)),       # running s
             pl.BlockSpec((U, k_top), lambda s: (0, 0)),       # running ids
@@ -223,12 +310,13 @@ def _topk_pallas(W_u, H, *, k_top: int, item_tile: int,
     )
 
     out_s, out_i = pl.pallas_call(
-        functools.partial(_topk_kernel, k_top=k_top, tile=T),
+        functools.partial(_topk_kernel, k_top=k_top, tile=T,
+                          scaled=scaled),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((U, k_top), W_u.dtype),
             jax.ShapeDtypeStruct((U, k_top), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, Wp, Hp)
+    )(*operands)
     return out_s, out_i

@@ -11,6 +11,19 @@ import pytest
 
 
 @pytest.fixture(scope="session")
+def requires_gpu():
+    """Skip unless an accelerator backend is live.  Tests that exercise
+    compiled (non-interpret) Pallas paths or occupancy behaviour depend
+    on real device semantics; on the CPU CI runners they skip cleanly
+    instead of interpreting for minutes."""
+    import jax
+    backend = jax.default_backend()
+    if backend not in ("gpu", "cuda", "rocm", "tpu"):
+        pytest.skip(f"accelerator required (backend={backend})")
+    return jax.devices()[0]
+
+
+@pytest.fixture(scope="session")
 def tiny_mc_problem():
     """Small low-rank matrix-completion problem shared across tests."""
     from repro.data.synthetic import synthetic_ratings, train_test_split

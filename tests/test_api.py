@@ -136,10 +136,15 @@ def test_unknown_solver_name_and_config():
 # --------------------------------------------------------------------- #
 
 def test_kernel_policy_validates_at_construction():
-    with pytest.raises(ValueError, match="sub_blocks"):
-        api.KernelPolicy(impl="wave", sub_blocks=2)
-    with pytest.raises(ValueError, match="sub_blocks"):
-        api.NomadConfig(kernel="wave_pallas", sub_blocks=4)
+    # wave impls can't pipeline sub-blocks; the combination used to
+    # hard-fail — now it downgrades to the matching non-wave impl with
+    # a warning so a valid sweep config stays constructible
+    with pytest.warns(UserWarning, match="sub_blocks"):
+        kp = api.KernelPolicy(impl="wave", sub_blocks=2)
+    assert kp.impl == "xla" and kp.sub_blocks == 2
+    with pytest.warns(UserWarning, match="sub_blocks"):
+        cfg = api.NomadConfig(kernel="wave_pallas", sub_blocks=4)
+    assert cfg.kernel.impl == "pallas" and cfg.kernel.sub_blocks == 4
     with pytest.raises(ValueError, match="impl"):
         api.KernelPolicy(impl="cuda")
     with pytest.raises(ValueError, match="mode"):

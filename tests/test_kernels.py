@@ -125,3 +125,110 @@ def test_chunked_attention_matches_dense():
     o_ref = ref.flash_attention_ref(q, k, v, causal=True)
     o = chunked_attention(q, k, v, causal=True, chunk=32)
     np.testing.assert_allclose(o, o_ref, rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------- #
+# occupancy grid wave kernel                                             #
+# --------------------------------------------------------------------- #
+
+def _mk_wave_cells(seed, p, m_t, n_t, k, nnz):
+    """p cells sharing one conflict-free wave layout (same rows/cols,
+    per-cell factors and values — conflict-freedom is index-only)."""
+    from repro.core.partition import pack_cell_waves
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m_t, nnz)
+    cols = rng.integers(0, n_t, nnz)
+    pre = np.lexsort((rows, cols))
+    base_vals = rng.normal(size=nnz).astype(np.float32)
+    _, wr, wc, _, wm, _ = pack_cell_waves(rows[pre], cols[pre],
+                                          base_vals[pre])
+    n_waves, width = wr.shape
+    Ws = jnp.asarray(rng.normal(size=(p, m_t, k)), jnp.float32)
+    Hs = jnp.asarray(rng.normal(size=(p, n_t, k)), jnp.float32)
+    wvs = jnp.asarray(rng.normal(size=(p, n_waves, width)), jnp.float32)
+    wrs = jnp.broadcast_to(jnp.asarray(wr), (p, n_waves, width))
+    wcs = jnp.broadcast_to(jnp.asarray(wc), (p, n_waves, width))
+    wms = jnp.broadcast_to(jnp.asarray(wm), (p, n_waves, width))
+    return Ws, Hs, wrs, wcs, wvs, wms
+
+
+@pytest.mark.parametrize("seed,p,k,nnz,wave_chunk", [
+    (0, 2, 8, 90, 4),
+    (1, 4, 100, 200, 8),     # k=100 -> lane padding; chunk divides unevenly
+    (2, 3, 16, 31, 16),      # wave_chunk > n_waves: single ragged chunk
+])
+def test_grid_kernel_matches_single_program_bitwise(seed, p, k, nnz,
+                                                    wave_chunk):
+    """Interpreter-mode equivalence gate for the occupancy grid path:
+    grid over (cell, wave_chunk) must equal the vmapped single-program
+    wave kernel *bitwise* — same update arithmetic, different schedule —
+    so the new Pallas formulation is CI-verifiable without a GPU."""
+    from repro.kernels.nomad_sgd import (nomad_sgd_waves_block,
+                                         nomad_sgd_waves_grid)
+    Ws, Hs, wrs, wcs, wvs, wms = _mk_wave_cells(seed, p, 24, 12, k, nnz)
+    Wg, Hg = nomad_sgd_waves_grid(Ws, Hs, wrs, wcs, wvs, wms, 0.01, 0.05,
+                                  wave_chunk=wave_chunk, interpret=True)
+    Wv, Hv = jax.vmap(
+        lambda W, H, r, c, v, m: nomad_sgd_waves_block(
+            W, H, r, c, v, m, 0.01, 0.05, wave_chunk=wave_chunk,
+            interpret=True)
+    )(Ws, Hs, wrs, wcs, wvs, wms)
+    assert np.array_equal(np.asarray(Wg), np.asarray(Wv))
+    assert np.array_equal(np.asarray(Hg), np.asarray(Hv))
+
+
+def test_block_sgd_cells_forced_grid_matches_vmap():
+    """ops.block_sgd_cells with block_rows forcing the grid path equals
+    the historical vmap-of-kernel dispatch (and the wave XLA oracle)."""
+    from repro.kernels import ops
+    from repro.kernels.policy import KernelPolicy
+    Ws, Hs, wrs, wcs, wvs, wms = _mk_wave_cells(3, 3, 16, 8, 8, 60)
+    grid_pol = KernelPolicy(impl="wave_pallas", wave_chunk=4,
+                            block_rows=64)      # forces wants_grid on CPU
+    vmap_pol = KernelPolicy(impl="wave_pallas", wave_chunk=4,
+                            block_rows=-1)      # forces the fallback
+    Wg, Hg = ops.block_sgd_cells(Ws, Hs, wrs, wcs, wvs, wms, 0.01, 0.05,
+                                 policy=grid_pol)
+    Wv, Hv = ops.block_sgd_cells(Ws, Hs, wrs, wcs, wvs, wms, 0.01, 0.05,
+                                 policy=vmap_pol)
+    assert np.array_equal(np.asarray(Wg), np.asarray(Wv))
+    assert np.array_equal(np.asarray(Hg), np.asarray(Hv))
+    Wr, Hr = jax.vmap(
+        lambda W, H, r, c, v, m: ref.block_sgd_waves(W, H, r, c, v, m,
+                                                     0.01, 0.05)
+    )(Ws, Hs, wrs, wcs, wvs, wms)
+    np.testing.assert_allclose(Wg, Wr, rtol=2e-5, atol=2e-6)
+
+
+def test_grid_kernel_accum_fp32_tracks_fp32_oracle():
+    """bf16 storage + fp32 accumulation in the grid kernel stays near
+    the fp32 trajectory (bounded, not bitwise — tolerance tier)."""
+    import tolerance as tol
+    from repro.kernels.nomad_sgd import nomad_sgd_waves_grid
+    Ws, Hs, wrs, wcs, wvs, wms = _mk_wave_cells(4, 2, 24, 12, 16, 120)
+    Wf, Hf = nomad_sgd_waves_grid(Ws, Hs, wrs, wcs, wvs, wms, 0.01, 0.05,
+                                  wave_chunk=4, interpret=True)
+    Wb, Hb = nomad_sgd_waves_grid(
+        Ws.astype(jnp.bfloat16), Hs.astype(jnp.bfloat16), wrs, wcs,
+        wvs.astype(jnp.bfloat16), wms, 0.01, 0.05, wave_chunk=4,
+        interpret=True, accum_fp32=True)
+    assert Wb.dtype == jnp.bfloat16
+    tol.assert_factors_close(Wb, Wf, dtype_policy="bf16",
+                             n_updates=120 / 24, what="W")
+    tol.assert_factors_close(Hb, Hf, dtype_policy="bf16",
+                             n_updates=120 / 12, what="H")
+
+
+def test_grid_kernel_compiled_on_accelerator(requires_gpu):
+    """On a real accelerator the grid kernel must lower (no interpret)
+    and agree with the XLA wave oracle."""
+    Ws, Hs, wrs, wcs, wvs, wms = _mk_wave_cells(5, 2, 16, 8, 8, 60)
+    from repro.kernels.nomad_sgd import nomad_sgd_waves_grid
+    Wg, Hg = nomad_sgd_waves_grid(Ws, Hs, wrs, wcs, wvs, wms, 0.01, 0.05,
+                                  wave_chunk=4, interpret=False)
+    Wr, Hr = jax.vmap(
+        lambda W, H, r, c, v, m: ref.block_sgd_waves(W, H, r, c, v, m,
+                                                     0.01, 0.05)
+    )(Ws, Hs, wrs, wcs, wvs, wms)
+    np.testing.assert_allclose(Wg, Wr, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(Hg, Hr, rtol=2e-5, atol=2e-6)

@@ -346,3 +346,135 @@ def test_server_growth_exposes_new_users(tiny_mc_problem):
         assert rec.version == 1 and rec.items.shape == (1, 3)
         with pytest.raises(KeyError):
             server.score([new_user], view=old)
+
+
+# --------------------------------------------------------------------- #
+# exact candidate filtering (already-rated exclusion)                    #
+# --------------------------------------------------------------------- #
+
+def _filtered_oracle(W_u, H, k_top, exclude):
+    """Dense argsort oracle with exclusions, same deterministic
+    smaller-id tie rule as topk_dense_oracle."""
+    scores = np.asarray(W_u, np.float32) @ np.asarray(H, np.float32).T
+    n = H.shape[0]
+    out_i = np.full((len(W_u), k_top), n, np.int32)
+    out_s = np.full((len(W_u), k_top), -np.inf, np.float32)
+    for u in range(len(W_u)):
+        sc = scores[u].copy()
+        if len(exclude[u]):
+            sc[np.asarray(exclude[u], np.int64)] = -np.inf
+        order = np.argsort(-sc, kind="stable")     # ties -> smaller id
+        order = order[sc[order] > -np.inf][:k_top]
+        out_i[u, :len(order)] = order
+        out_s[u, :len(order)] = sc[order]
+    return out_s, out_i
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("seed,ties", [(0, False), (1, True), (2, True)])
+def test_topk_filtered_matches_dense_oracle(seed, ties, impl):
+    from repro.serve import topk_scores_filtered
+    rng = np.random.default_rng(seed)
+    W_u, H = strategies.topk_case(seed, 12, 40, 6, ties)
+    exclude = [rng.choice(40, size=rng.integers(0, 15), replace=False)
+               for _ in range(12)]
+    s, i = topk_scores_filtered(W_u, H, 6, exclude=exclude, policy=impl,
+                                item_tile=16)
+    es, ei = _filtered_oracle(W_u, H, 6, exclude)
+    np.testing.assert_array_equal(np.asarray(i), ei)
+    np.testing.assert_array_equal(np.asarray(s), es)
+
+
+def test_topk_filtered_exhausted_user_pads_with_sentinel():
+    """A user whose exclusions leave fewer than k_top admissible items
+    pads with the sentinel id n / -inf score."""
+    from repro.serve import topk_scores_filtered
+    W_u, H = strategies.topk_case(4, 3, 8, 4, False)
+    exclude = [np.arange(6), np.array([], np.int64), np.arange(8)]
+    s, i = topk_scores_filtered(W_u, H, 4, exclude=exclude, policy="xla",
+                                item_tile=4)
+    assert np.all(np.asarray(i)[0, 2:] == 8)       # only 2 admissible
+    assert np.all(np.isneginf(np.asarray(s)[0, 2:]))
+    assert np.all(np.asarray(i)[1] < 8)            # unfiltered user full
+    assert np.all(np.asarray(i)[2] == 8)           # fully rated user
+    es, ei = _filtered_oracle(W_u, H, 4, exclude)
+    np.testing.assert_array_equal(np.asarray(i), ei)
+
+
+def test_server_filter_rated_excludes_published_map(tiny_mc_problem):
+    """publish(rated=...) + ServeConfig(filter_rated=True): no user is
+    ever recommended an item they already rated, and the survivors
+    match the filtered dense oracle exactly."""
+    rng = np.random.default_rng(9)
+    m, n, k = 30, 50, 6
+    W = rng.normal(size=(m, k)).astype(np.float32)
+    H = rng.normal(size=(n, k)).astype(np.float32)
+    u_rows = rng.integers(0, m, 300)
+    i_rows = rng.integers(0, n, 300)
+    store = FactorStore()
+    view = store.publish(W, H, rated=(u_rows, i_rows))
+    srv = RecServer(store, ServeConfig(top_k=5, filter_rated=True,
+                                       item_tile=16))
+    users = [0, 7, 19]
+    rec = srv.score(users)
+    exclude = [np.unique(i_rows[u_rows == u]) for u in users]
+    es, ei = _filtered_oracle(W[users], H, 5, exclude)
+    np.testing.assert_array_equal(rec.items, ei)   # identity catalogs
+    for j, u in enumerate(users):
+        assert not set(rec.items[j].tolist()) & set(exclude[j].tolist())
+    # filter off on the same store: rated items come back
+    plain = RecServer(store, ServeConfig(top_k=5, item_tile=16)).score(users)
+    assert any(set(plain.items[j].tolist()) & set(exclude[j].tolist())
+               for j in range(len(users)))
+
+
+def test_view_rated_csr_validates():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(4, 3)).astype(np.float32)
+    H = rng.normal(size=(6, 3)).astype(np.float32)
+    store = FactorStore()
+    view = store.publish(W, H, rated=(np.array([0, 0, 2]),
+                                      np.array([1, 5, 3])))
+    assert [a.tolist() for a in view.rated_for(np.arange(4))] == \
+        [[1, 5], [], [3], []]
+    with pytest.raises(ValueError, match="rated"):
+        FactorView(W=view.W, H=view.H, version=1,
+                   rated_indptr=np.array([0, 1]), rated_items=None)
+
+
+# --------------------------------------------------------------------- #
+# int8 quantized publish + scoring                                       #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_quantized_publish_scores_exactly(impl):
+    """publish(quantize='int8') + RecServer.score must equal the
+    quantized dense oracle bitwise: dequantized user rows against int8
+    H with the per-row scale applied after the dot (scale-after-sum)."""
+    from repro.serve import quantize_int8
+    rng = np.random.default_rng(3)
+    m, n, k = 10, 33, 5
+    W = rng.normal(size=(m, k)).astype(np.float32) * 2
+    H = rng.normal(size=(n, k)).astype(np.float32)
+    store = FactorStore()
+    view = store.publish(W, H, quantize="int8")
+    assert view.quantized and str(np.asarray(view.H).dtype) == "int8"
+    srv = RecServer(store, ServeConfig(top_k=4, item_tile=8, kernel=impl))
+    rec = srv.score(np.arange(m))
+    Wq, sw = quantize_int8(W)
+    Hq, sh = quantize_int8(H)
+    Wdq = Wq.astype(np.float32) * sw[:, None]
+    es, ei = topk_dense_oracle(Wdq, Hq, 4, h_scale=sh)
+    np.testing.assert_array_equal(rec.items, ei)
+    np.testing.assert_array_equal(rec.scores, es)
+
+
+def test_quantize_int8_contract():
+    from repro.serve import quantize_int8
+    A = np.array([[0.0, 0.0], [1.0, -2.0], [127.5, 0.5]], np.float32)
+    q, s = quantize_int8(A)
+    assert q.dtype == np.int8 and s.dtype == np.float32
+    assert np.all(q[0] == 0) and s[0] == 1.0       # zero row: scale guard
+    assert np.max(np.abs(q), axis=1).tolist() == [0, 127, 127]
+    np.testing.assert_allclose(q.astype(np.float32) * s[:, None], A,
+                               atol=np.max(np.abs(A)) / 254 + 1e-7)

@@ -1,0 +1,190 @@
+"""Tolerance tier (DESIGN.md §13): bounded — not bitwise — assertions
+for the deliberate approximations.
+
+Covered here:
+
+* bf16/fp16 factor storage vs. the fp32 oracle across every engine
+  surface (``xla``/``wave``/``wave_pallas`` × ``loop``/``fused``),
+  bounded by the ``eps * sqrt(updates)`` drift model in
+  :mod:`tolerance`;
+* convergence equivalence at the bench shape (512 x 256, k=100) — the
+  acceptance gate for the precision policy;
+* the low-precision checkpoint round-trip (save bf16 -> restore ->
+  resume) staying bitwise *within* the bf16 world;
+* int8 serving quantization, bounded by the analytic per-row absmax
+  quantization error.
+
+Everything runs on CPU; hypothesis drives extra shapes where installed
+(seed-parametrized fallbacks always run, via ``hypothesis_compat``).
+Run this file alone with ``-m tolerance``.
+"""
+import numpy as np
+import pytest
+import strategies  # noqa: F401  (bundles used via hypothesis)
+import tolerance as tol
+from hypothesis_compat import given, settings, st
+
+from repro import api
+
+pytestmark = pytest.mark.tolerance
+
+IMPL_DISPATCH = [(i, d)
+                 for i in ("xla", "wave", "wave_pallas")
+                 for d in ("loop", "fused")]
+
+_M, _N, _NNZ, _K, _EPOCHS = 120, 60, 3000, 8, 3
+
+
+def _mk_problem(seed=0, m=_M, n=_N, nnz=_NNZ, k=_K):
+    from repro.data.synthetic import synthetic_ratings, train_test_split
+    rows, cols, vals, _, _ = synthetic_ratings(m, n, nnz, k=k, seed=seed,
+                                               noise=0.05)
+    train, test = train_test_split(rows, cols, vals, 0.1, seed=seed + 1)
+    return api.MCProblem(rows=train[0], cols=train[1], vals=train[2],
+                         m=m, n=n, test=test)
+
+
+def _solve(problem, *, impl, dispatch, dtype_policy, k=_K,
+           epochs=_EPOCHS, seed=0):
+    return api.solve(problem, api.NomadConfig(
+        k=k, p=2, lam=0.05, epochs=epochs, seed=seed, kernel=impl,
+        dispatch=dispatch, dtype_policy=dtype_policy))
+
+
+# one fp32 oracle per engine surface, shared across the policy matrix
+_ORACLE = {}
+
+
+def _fp32(problem, impl, dispatch):
+    key = (impl, dispatch)
+    if key not in _ORACLE:
+        _ORACLE[key] = _solve(problem, impl=impl, dispatch=dispatch,
+                              dtype_policy="fp32")
+    return _ORACLE[key]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return _mk_problem()
+
+
+# --------------------------------------------------------------------- #
+# low-precision factors vs. the fp32 oracle, full engine matrix          #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("impl,dispatch", IMPL_DISPATCH)
+@pytest.mark.parametrize("policy", ["bf16", "fp16"])
+def test_lowp_factor_drift_bounded(problem, impl, dispatch, policy):
+    oracle = _fp32(problem, impl, dispatch)
+    res = _solve(problem, impl=impl, dispatch=dispatch,
+                 dtype_policy=policy)
+    want = {"bf16": "bfloat16", "fp16": "float16"}[policy]
+    assert str(np.asarray(res.W).dtype) == want
+    nnz = len(problem.rows)
+    tol.assert_factors_close(res.W, oracle.W, dtype_policy=policy,
+                             n_updates=_EPOCHS * nnz / _M, what="W")
+    tol.assert_factors_close(res.H, oracle.H, dtype_policy=policy,
+                             n_updates=_EPOCHS * nnz / _N, what="H")
+    tol.assert_convergence_equivalent(res.trace_rmse, oracle.trace_rmse,
+                                      rel=0.10)
+
+
+def test_fp32_policy_is_bitwise_noop(problem):
+    """`dtype_policy='fp32'` must not merely be *close* to the historical
+    path — it must be byte-for-byte it (the PR's bitwise acceptance)."""
+    base = api.solve(problem, api.NomadConfig(
+        k=_K, p=2, lam=0.05, epochs=_EPOCHS, seed=0, kernel="xla"))
+    res = _solve(problem, impl="xla", dispatch="fused",
+                 dtype_policy="fp32")
+    tol.assert_bitwise(res.W, base.W, "W")
+    tol.assert_bitwise(res.H, base.H, "H")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(["bf16", "fp16"]))
+def test_lowp_drift_bounded_property(seed, policy):
+    """Hypothesis-driven shapes for the drift bound (xla/fused surface —
+    the matrix test above covers the impl cross-product)."""
+    prob = _mk_problem(seed=seed, m=48, n=24, nnz=600, k=4)
+    oracle = api.solve(prob, api.NomadConfig(
+        k=4, p=2, lam=0.05, epochs=2, seed=0, kernel="xla"))
+    res = api.solve(prob, api.NomadConfig(
+        k=4, p=2, lam=0.05, epochs=2, seed=0, kernel="xla",
+        dtype_policy=policy))
+    nnz = len(prob.rows)
+    tol.assert_factors_close(res.W, oracle.W, dtype_policy=policy,
+                             n_updates=2 * nnz / 48, what="W")
+    tol.assert_factors_close(res.H, oracle.H, dtype_policy=policy,
+                             n_updates=2 * nnz / 24, what="H")
+
+
+# --------------------------------------------------------------------- #
+# acceptance gate: convergence equivalence at the bench shape            #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.slow
+def test_bf16_converges_at_bench_shape():
+    prob = _mk_problem(seed=3, m=512, n=256, nnz=8192, k=8)
+    fp = api.solve(prob, api.NomadConfig(
+        k=100, p=4, lam=0.05, epochs=5, seed=0, kernel="xla"))
+    bf = api.solve(prob, api.NomadConfig(
+        k=100, p=4, lam=0.05, epochs=5, seed=0, kernel="xla",
+        dtype_policy="bf16"))
+    tol.assert_convergence_equivalent(bf.trace_rmse, fp.trace_rmse,
+                                      rel=0.05)
+
+
+# --------------------------------------------------------------------- #
+# low-precision checkpoint round-trip                                    #
+# --------------------------------------------------------------------- #
+
+def test_bf16_checkpoint_roundtrip_resumes_bitwise(problem, tmp_path):
+    """bf16 is an approximation of fp32, but the bf16 world itself is
+    deterministic: save -> restore must be bitwise, and a restored
+    warm start must equal the unbroken run byte for byte."""
+    from repro.checkpoint import restore_fit_result, save_fit_result
+    cfg = dict(k=_K, p=2, lam=0.05, seed=0, kernel="xla",
+               dtype_policy="bf16")
+    first = api.solve(problem, api.NomadConfig(epochs=2, **cfg))
+    assert str(np.asarray(first.W).dtype) == "bfloat16"
+    save_fit_result(str(tmp_path), 2, first)
+    restored, step = restore_fit_result(str(tmp_path))
+    assert step == 2
+    assert str(np.asarray(restored.W).dtype) == "bfloat16"
+    tol.assert_bitwise(restored.W, first.W, "restored W")
+    tol.assert_bitwise(restored.H, first.H, "restored H")
+    resumed = api.solve(problem, api.NomadConfig(epochs=3, **cfg),
+                        warm_start=restored)       # 2 + 3 == 5 epochs
+    unbroken = api.solve(problem, api.NomadConfig(epochs=5, **cfg))
+    tol.assert_bitwise(resumed.W, unbroken.W, "resumed W")
+    tol.assert_bitwise(resumed.H, unbroken.H, "resumed H")
+
+
+# --------------------------------------------------------------------- #
+# int8 serving quantization                                              #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_int8_scores_within_analytic_bound(seed):
+    """Quantized serving scores vs. exact fp32 scores, bounded by the
+    per-row absmax quantization error: with ``e = dequant - exact``
+    (|e| <= scale/2 elementwise, no clipping by construction),
+    |score err| <= 0.5*s_w*sum|H| + 0.5*s_h*sum|W| + 0.25*k*s_w*s_h."""
+    from repro.serve import quantize_int8
+    rng = np.random.default_rng(seed)
+    U, n, k = 16, 200, 24
+    W = rng.normal(size=(U, k)).astype(np.float32) * 3
+    H = rng.normal(size=(n, k)).astype(np.float32)
+    Wq, sw = quantize_int8(W)
+    Hq, sh = quantize_int8(H)
+    exact = W.astype(np.float64) @ H.astype(np.float64).T
+    approx = ((Wq.astype(np.float64) * sw[:, None].astype(np.float64))
+              @ (Hq.astype(np.float64) * sh[:, None].astype(np.float64)).T)
+    bound = (0.5 * sw[:, None] * np.abs(H).sum(1)[None, :]
+             + 0.5 * sh[None, :] * np.abs(W).sum(1)[:, None]
+             + 0.25 * k * sw[:, None] * sh[None, :]).astype(np.float64)
+    assert np.all(np.abs(approx - exact) <= bound + 1e-12)
+    # dequantizing a quantized row is exact under re-quantization
+    Wq2, sw2 = quantize_int8(Wq.astype(np.float32) * sw[:, None])
+    np.testing.assert_array_equal(Wq2, Wq)

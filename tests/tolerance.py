@@ -1,0 +1,101 @@
+"""Reusable tolerance tier (DESIGN.md §13).
+
+The repo's default correctness currency is **bitwise** equality against
+a serial oracle.  Approximation features (low-precision factor storage,
+int8 serving quantization, future ANN retrieval / gradient compression)
+deliberately break it, so they assert against *bounds* instead — but
+principled ones, derived from the storage format, not hand-tuned
+``atol`` soup:
+
+* :func:`assert_factors_close` — elementwise error vs. the fp32 oracle
+  bounded by ``C * eps(policy) * sqrt(n_updates)`` relative to the
+  oracle's magnitude: each update commits one rounding of relative size
+  ``eps``, and independent roundings accumulate as a random walk.  ``C``
+  absorbs the constant factors (gather/scatter rounding, the regression
+  term); the *shape* of the bound — linear in eps, sqrt in updates — is
+  what the tier pins down, so a bug that breaks accumulation (e.g.
+  accumulating in bf16 instead of fp32) blows the bound by orders of
+  magnitude rather than sliding under a slack atol.
+* :func:`assert_convergence_equivalent` — a low-precision run must reach
+  the same held-out RMSE as the fp32 run within a relative band, and
+  must actually have converged (final < initial).  Precision changes the
+  arithmetic, not the optimization problem.
+* :func:`assert_bitwise` — the existing currency, importable from the
+  same place so a test file can state both regimes side by side.
+
+Every helper takes plain arrays; nothing here imports the engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["EPS", "rmse", "rel_err_in_eps", "assert_bitwise",
+           "assert_factors_close", "assert_convergence_equivalent"]
+
+# machine epsilon (unit roundoff) per storage policy
+EPS = {
+    "fp32": 2.0 ** -24, "float32": 2.0 ** -24,
+    "bf16": 2.0 ** -9, "bfloat16": 2.0 ** -9,
+    "fp16": 2.0 ** -11, "float16": 2.0 ** -11,
+}
+
+
+def _f64(a) -> np.ndarray:
+    # bfloat16 numpy arrays (ml_dtypes) upcast fine via astype
+    return np.asarray(a).astype(np.float64)
+
+
+def rmse(a, b) -> float:
+    a, b = _f64(a), _f64(b)
+    return float(np.sqrt(np.mean((a - b) ** 2)))
+
+
+def rel_err_in_eps(approx, oracle, policy: str) -> float:
+    """Max elementwise error in units of the policy's eps, relative to
+    ``1 + |oracle|`` (absolute near zero, relative at magnitude)."""
+    a, o = _f64(approx), _f64(oracle)
+    return float(np.max(np.abs(a - o) / (1.0 + np.abs(o))) / EPS[policy])
+
+
+def assert_bitwise(a, b, what: str = "arrays"):
+    """The repo's default: byte-for-byte equality."""
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape, \
+        f"{what}: dtype/shape mismatch {a.dtype}{a.shape} vs {b.dtype}{b.shape}"
+    assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), \
+        f"{what}: not bitwise-identical"
+
+
+def assert_factors_close(approx, oracle, *, dtype_policy: str,
+                         n_updates: int, c: float = 16.0,
+                         what: str = "factors"):
+    """Bound the low-precision factor drift against the fp32 oracle.
+
+    ``n_updates`` is how many SGD updates touched a row (use the mean
+    ``nnz / rows`` — the walk length).  The bound is
+    ``c * eps * sqrt(n_updates)`` per unit of oracle magnitude.
+    """
+    eps = EPS[dtype_policy]
+    bound = c * eps * np.sqrt(max(float(n_updates), 1.0))
+    a, o = _f64(approx), _f64(oracle)
+    err = float(np.max(np.abs(a - o) / (1.0 + np.abs(o))))
+    assert err <= bound, (
+        f"{what}: max relative error {err:.3e} exceeds "
+        f"{c} * eps({dtype_policy}) * sqrt({n_updates}) = {bound:.3e}")
+    return err
+
+
+def assert_convergence_equivalent(trace_lowp, trace_fp32, *,
+                                  rel: float = 0.05,
+                                  what: str = "held-out RMSE"):
+    """Same optimization outcome: the low-precision run's final RMSE is
+    within ``rel`` of the fp32 run's, and it actually descended."""
+    lo, fp = _f64(trace_lowp).ravel(), _f64(trace_fp32).ravel()
+    assert lo.size and fp.size, f"{what}: empty trace"
+    assert lo[-1] < lo[0], \
+        f"{what}: low-precision run did not descend ({lo[0]} -> {lo[-1]})"
+    gap = abs(lo[-1] - fp[-1])
+    assert gap <= rel * fp[-1], (
+        f"{what}: final gap {gap:.4g} exceeds {rel:.0%} of fp32 final "
+        f"{fp[-1]:.4g}")
+    return gap
