@@ -1,0 +1,148 @@
+"""Integrity-layer costs (DESIGN.md §14): what does surviving
+corruption actually cost?
+
+Three rows, one per integrity mechanism, recorded under ``robust/`` in
+``BENCH_kernels.json``:
+
+* ``robust/transport_overhead`` — the discrete-event simulator at a
+  bench shape with the checksummed transport on (envelope seal +
+  CRC verify + ledger bookkeeping per nomadic hop, zero faults)
+  against the plain channel.  The run is bitwise-identical by
+  construction, so the derived ``overhead_pct`` (interleaved
+  median-of-N) is pure integrity tax — a magnitude within a few
+  percent means the tax sits below host timing noise.
+* ``robust/recovery_corrupt_ckpt`` — end-to-end
+  ``StreamingSession.kill`` recovery when the newest checkpoint has
+  been bitflipped: quarantine, fall back to the previous verified
+  step, replay.  Derived fields carry the verified-fallback evidence
+  (which step was quarantined, which booted).
+* ``robust/divergence_rollback`` — a round whose step size blows up
+  f32, caught by the on-device sentinel and retried with a backed-off
+  alpha via :class:`~repro.api.DivergencePolicy`.  The row is the
+  quarantined round's wall time; ``x_clean`` derives the multiple of a
+  clean round (2 rollbacks ⇒ about 3 trainings + 2 restores).
+
+Set ``NOMAD_BENCH_SMOKE=1`` (CI) to shrink shapes.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro import api
+from repro.checkpoint import committed_steps
+from repro.core import objective
+from repro.core.async_sim import NomadSimulator, SimConfig
+from repro.core.stepsize import PowerSchedule
+from repro.runtime.chaos import bitflip_checkpoint
+from repro.runtime.transport import TransportConfig
+
+from .common import Row, small_netflix, timed
+
+_SMOKE = bool(os.environ.get("NOMAD_BENCH_SMOKE"))
+_P, _K = 8, 8
+_EPOCHS = 2.0 if _SMOKE else 4.0
+
+
+def _problem():
+    pr = small_netflix(k=_K)
+    return api.MCProblem(rows=pr["train"][0], cols=pr["train"][1],
+                         vals=pr["train"][2], m=pr["m"], n=pr["n"],
+                         test=pr["test"])
+
+
+def _cfg(p=_P, epochs=1, **kw):
+    kw.setdefault("stepsize", PowerSchedule(alpha=0.05, beta=0.02))
+    return api.NomadConfig(k=_K, p=p, lam=0.01, epochs=epochs, seed=0,
+                           **kw)
+
+
+def _transport_row() -> Row:
+    pr = small_netflix(k=_K)
+    rows, cols, vals = pr["train"]
+    W0, H0 = objective.init_factors_np(0, pr["m"], pr["n"], _K)
+    sched = PowerSchedule(alpha=0.05, beta=0.02)
+
+    def sim(transport):
+        cfg = SimConfig(p=_P, k=_K, lam=0.01, schedule=sched,
+                        epochs=_EPOCHS, seed=0, transport=transport)
+        return NomadSimulator(cfg, pr["m"], pr["n"], rows, cols, vals,
+                              W0, H0).run()
+
+    # interleaved median-of-N: the envelope tax is small vs. run-to-run
+    # interpreter noise, so alternate the two configurations (load
+    # drift hits both) and compare the medians
+    reps = 1 if _SMOKE else 5
+    plain_us, sealed_us, res = [], [], None
+    for _ in range(reps):
+        plain_us.append(timed(lambda: sim(None))[1])
+        r, us = timed(lambda: sim(TransportConfig()))
+        res, _ = r, sealed_us.append(us)
+    us_plain = float(np.median(plain_us))
+    us_sealed = float(np.median(sealed_us))
+    pct = 100.0 * (us_sealed - us_plain) / max(us_plain, 1e-9)
+    st = res.transport
+    return ("robust/transport_overhead", us_sealed,
+            f"overhead_pct={pct:.1f} plain_us={us_plain:.0f} "
+            f"sent={st['sent']} delivered={st['delivered']} "
+            f"nnz={pr['nnz']} p={_P}")
+
+
+def _recovery_row() -> Row:
+    prob = _problem()
+    with tempfile.TemporaryDirectory() as d:
+        sess = api.StreamingSession(
+            prob, _cfg(),
+            faults=api.FaultPolicy(checkpoint_dir=d, checkpoint_every=1,
+                                   keep=3))
+        for _ in range(3):
+            sess.fit()
+        flipped = bitflip_checkpoint(d, seed=0)
+        # the step the recovery must fall back to once `flipped` is
+        # quarantined (replay re-checkpoints, so read it pre-kill)
+        fallback = max(s for s in committed_steps(d) if s < flipped)
+        t0 = time.perf_counter()
+        tr = sess.kill(_P - 1)
+        dt = time.perf_counter() - t0
+        quarantined = sum(1 for f in os.listdir(d)
+                          if f.endswith(".corrupt"))
+        return ("robust/recovery_corrupt_ckpt", dt * 1e6,
+                f"recover_ms={dt * 1e3:.1f} flipped_step={flipped} "
+                f"fallback_step={fallback} quarantined={quarantined} "
+                f"p={tr.p_old}->{tr.p_new}")
+
+
+def _divergence_row() -> Row:
+    prob = _problem()
+
+    def round_us(alpha, faults):
+        sess = api.StreamingSession(prob, _cfg(stepsize=PowerSchedule(
+            alpha=alpha, beta=0.02)), faults=faults)
+        t0 = time.perf_counter()
+        res = sess.fit()
+        return res, (time.perf_counter() - t0) * 1e6
+
+    with tempfile.TemporaryDirectory() as d:
+        _, us_clean = round_us(0.05, api.FaultPolicy(
+            checkpoint_dir=os.path.join(d, "a"),
+            divergence=api.DivergencePolicy()))
+        res, us_quar = round_us(1e6, api.FaultPolicy(
+            checkpoint_dir=os.path.join(d, "b"),
+            divergence=api.DivergencePolicy(max_rollbacks=4,
+                                            backoff=1e-4)))
+    n_roll = res.extras["divergence"]["rollbacks"]
+    return ("robust/divergence_rollback", us_quar,
+            f"rollbacks={n_roll} x_clean={us_quar / max(us_clean, 1e-9):.2f} "
+            f"clean_us={us_clean:.0f} p={_P}")
+
+
+def robust_rows() -> list:
+    return [_transport_row(), _recovery_row(), _divergence_row()]
+
+
+if __name__ == "__main__":
+    for name, us, derived in robust_rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -50,7 +50,18 @@ def _run_meta() -> dict:
         "device_kind": jax.devices()[0].device_kind,
         "dtype_policy": os.environ.get("NOMAD_BENCH_DTYPE", "fp32"),
         "cpu_count": n_cpu,
+        # integrity layer (DESIGN.md §14): which nomadic transport the
+        # robust/ rows were priced against
+        "transport": _transport_stamp(),
     }
+
+
+def _transport_stamp() -> str:
+    from repro.runtime.transport import TransportConfig
+
+    t = TransportConfig()
+    return (f"crc32+seq+retx(timeout_hops={t.timeout_hops},"
+            f"backoff={t.backoff},max_retries={t.max_retries})")
 
 
 def _write_kernel_record(rows) -> None:
@@ -101,8 +112,8 @@ def main() -> None:
     only = [s for s in args.only.split(",") if s]
 
     from . import paper_figs, kernel_bench, roofline, solver_bench
-    from . import driver_bench, elastic_bench, schedule_bench, \
-        serve_bench, stream_bench
+    from . import driver_bench, elastic_bench, robust_bench, \
+        schedule_bench, serve_bench, stream_bench
 
     suites = [
         ("fig5", paper_figs.fig5_single_machine),
@@ -122,6 +133,7 @@ def main() -> None:
         ("driver", driver_bench.driver_rows),
         ("elastic", elastic_bench.elastic_rows),
         ("serve", serve_bench.serve_rows),
+        ("robust", robust_bench.robust_rows),
         ("roofline", roofline.roofline_rows),
     ]
 
@@ -135,7 +147,8 @@ def main() -> None:
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
             if name in ("kernel", "solver", "stream", "schedule",
-                        "driver", "elastic", "serve", "roofline"):
+                        "driver", "elastic", "serve", "robust",
+                        "roofline"):
                 _write_kernel_record(rows)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)

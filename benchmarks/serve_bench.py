@@ -15,14 +15,22 @@ Two layers, mirroring the subsystem:
   the price of hot-swapping (jit re-trace on the post-growth shapes),
   and queries/s shows the server never pauses.
 
+* ``serve/e2e_shed`` — the deadline contract (DESIGN.md §14): a burst
+  far larger than the scorer can drain inside ``timeout_ms`` is
+  submitted at once; aged requests must fail fast with
+  :class:`~repro.serve.ServeTimeout` instead of occupying scorer time,
+  so the served remainder keeps its latency.
+
 Derived fields: ``queries_per_s`` / ``p50_ms`` / ``p99_ms`` (+
-``n_swaps`` for the hotswap row).  Set ``NOMAD_BENCH_SMOKE=1`` (CI) to
-shrink shapes and query counts.
+``n_swaps`` for the hotswap row, ``served``/``shed`` for the shed
+row).  Set ``NOMAD_BENCH_SMOKE=1`` (CI) to shrink shapes and query
+counts.
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
 
 import numpy as np
 
@@ -124,6 +132,36 @@ def _serve_load(store, n_swaps_box=None, sess=None) -> tuple:
     return qps, p50, p99
 
 
+def _shed_row(store) -> Row:
+    """Overload burst against a deadline-bearing server: ``run_load``
+    raises on any failed future, so the shed row drives its own loop and
+    counts :class:`ServeTimeout` rejections instead."""
+    from repro.serve import RecServer, ServeConfig, ServeTimeout
+
+    ttl = 10.0
+    server = RecServer(store, ServeConfig(top_k=_TOPK, max_batch=8,
+                                          max_wait_ms=0.0,
+                                          item_tile=_TILE, kernel="xla",
+                                          timeout_ms=ttl))
+    m = store.view().m
+    with server:
+        server.recommend([0])           # warm the jit caches
+        burst = _QUERIES
+        t0 = time.perf_counter()
+        futs = [server.submit([u % m]) for u in range(burst)]
+        served = shed = 0
+        for f in futs:
+            try:
+                f.result(timeout=60.0)
+                served += 1
+            except ServeTimeout:
+                shed += 1
+        wall = time.perf_counter() - t0
+    return ("serve/e2e_shed", wall * 1e6 / burst,
+            f"served={served} shed={shed} shed_frac={shed / burst:.2f} "
+            f"timeout_ms={ttl} burst={burst}")
+
+
 def serve_rows() -> list:
     from repro import api
     from repro.serve import FactorStore
@@ -135,6 +173,8 @@ def serve_rows() -> list:
     out.append(("serve/e2e_idle", 1e6 / qps,
                 f"queries_per_s={qps:.1f} p50_ms={p50:.3f} "
                 f"p99_ms={p99:.3f} users={_M} items={_N}"))
+
+    out.append(_shed_row(FactorStore.from_fit_result(result)))
 
     sess = api.StreamingSession(problem, result.config, warm_start=result)
     swaps: list = []

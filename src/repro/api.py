@@ -47,13 +47,17 @@ from .core.stepsize import PowerSchedule
 from .core.topology import (HierarchicalMesh, NetworkModel,
                             UniformTopology, schedule_makespan)
 from .kernels.policy import KernelPolicy
+from .runtime.chaos import DegradedLink, LinkEvent
+from .runtime.transport import TransportConfig, TransportStats
 
 __all__ = [
     "MCProblem", "ProblemDelta", "SolverConfig", "NomadConfig",
     "DsgdConfig", "CcdConfig", "AlsConfig", "HogwildConfig",
     "AsyncSimConfig", "FitResult", "KernelPolicy", "OwnershipSchedule",
-    "TransitionSchedule", "FaultPolicy", "NetworkModel",
+    "TransitionSchedule", "FaultPolicy", "DivergencePolicy",
+    "DivergenceError", "NetworkModel",
     "UniformTopology", "HierarchicalMesh", "schedule_makespan",
+    "TransportConfig", "TransportStats", "DegradedLink", "LinkEvent",
     "solve", "register_solver", "solver_names", "config_for",
     "partial_fit", "register_partial_fit", "supports_partial_fit",
     "streaming_solver_names", "StreamingSession",
@@ -569,11 +573,41 @@ class AsyncSimConfig(SolverConfig):
     #: for NOMAD every ``"arrive"`` hop, for DSGD/DSGD++ the per-sub-
     #: epoch block-shipment barrier
     topology: Optional[NetworkModel] = None
+    #: integrity transport (DESIGN.md §14): ``None`` ships nomadic items
+    #: over the historical perfect channel (the zero-cost path — results
+    #: stay bitwise).  A :class:`~repro.runtime.transport.TransportConfig`
+    #: seals every ownership transfer in a sequence-numbered CRC32
+    #: envelope; counters land in ``FitResult.extras["transport"]``.
+    #: Without ``link_faults`` results are *still* bitwise-identical to
+    #: ``transport=None`` — asserted in tests/test_transport.py.
+    transport: Optional[TransportConfig] = None
+    #: :class:`~repro.runtime.chaos.DegradedLink` message-fault model
+    #: (drop / duplicate / reorder / corrupt / delay, scripted windows +
+    #: seeded background rates; NOMAD mode only).  Implies ``transport``:
+    #: the full at-least-once machinery runs — acknowledgement hops,
+    #: exponential-backoff retransmits, receiver-side dedup — and every
+    #: fault script still yields an exactly-serializable history.
+    link_faults: Optional[DegradedLink] = None
 
     def __post_init__(self):
         super().__post_init__()
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.transport is not None and not isinstance(
+                self.transport, TransportConfig):
+            raise TypeError(
+                f"transport must be a TransportConfig, got "
+                f"{type(self.transport).__name__}")
+        if self.link_faults is not None:
+            if not isinstance(self.link_faults, DegradedLink):
+                raise TypeError(
+                    f"link_faults must be a DegradedLink, got "
+                    f"{type(self.link_faults).__name__}")
+            if self.mode != "nomad":
+                raise ValueError(
+                    "link_faults are only simulated for mode='nomad' "
+                    "(the bulk-synchronous baselines ship whole blocks "
+                    "at barriers)")
         if self.topology is not None:
             if not isinstance(self.topology, NetworkModel):
                 raise TypeError(
@@ -629,12 +663,75 @@ class AsyncSimConfig(SolverConfig):
                    else np.asarray(self.speed, dtype=np.float64)),
             failures=self.failures, rejoins=self.rejoins, seed=self.seed,
             record_every=self.record_every, arrivals=self.arrivals,
-            topology=self.topology)
+            topology=self.topology, transport=self.transport,
+            link_faults=self.link_faults)
 
 
 # ---------------------------------------------------------------------- #
 # Fault tolerance policy                                                  #
 # ---------------------------------------------------------------------- #
+
+class DivergenceError(RuntimeError):
+    """A run kept diverging after exhausting
+    :attr:`DivergencePolicy.max_rollbacks` rollback/backoff retries."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DivergencePolicy:
+    """Quarantine-and-retry for numerically diverged runs (DESIGN.md
+    §14).  The fused driver's on-device sentinel
+    (``FitResult.extras["divergence"]["finite"]``) trips on any
+    non-finite factor entry; ``spike_factor`` additionally trips when a
+    block's final held-out RMSE exceeds ``spike_factor`` × the last good
+    block's.  On trip: roll back to the last good state (checkpoint /
+    session round), multiply the step-size schedule's ``alpha`` by
+    ``backoff``, and retry — up to ``max_rollbacks`` times, then raise
+    :class:`DivergenceError`.
+
+    Detection is deterministic (same factors, same schedule → same
+    trip), so a crash-resumed run replays the same rollbacks and lands
+    on the same state."""
+    max_rollbacks: int = 2
+    backoff: float = 0.5
+    spike_factor: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_rollbacks < 1:
+            raise ValueError(
+                f"max_rollbacks must be >= 1, got {self.max_rollbacks}")
+        if not (0.0 < self.backoff < 1.0):
+            raise ValueError(
+                f"backoff must be in (0, 1), got {self.backoff}")
+        if self.spike_factor is not None and self.spike_factor <= 1.0:
+            raise ValueError(
+                f"spike_factor must be > 1, got {self.spike_factor}")
+
+    def tripped(self, result: "FitResult",
+                ref_rmse: Optional[float]) -> bool:
+        """Did ``result`` diverge relative to the last good RMSE?"""
+        div = result.extras.get("divergence", {})
+        if not div.get("finite", True):
+            return True
+        if (self.spike_factor is not None and ref_rmse is not None
+                and len(result.trace_rmse)
+                and np.isfinite(ref_rmse)):
+            last = float(result.trace_rmse[-1])
+            if not np.isfinite(last) \
+                    or last > self.spike_factor * ref_rmse:
+                return True
+        return False
+
+    def backed_off(self, config: "SolverConfig",
+                   rollbacks: int) -> "SolverConfig":
+        """``config`` with the step-size alpha scaled by
+        ``backoff ** rollbacks``."""
+        if rollbacks == 0:
+            return config
+        sched = config.make_stepsize()
+        return dataclasses.replace(
+            config, stepsize=dataclasses.replace(
+                sched, alpha=sched.alpha * self.backoff ** rollbacks))
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultPolicy:
@@ -666,10 +763,19 @@ class FaultPolicy:
     #: re-route the ownership schedule by live speed estimates
     #: (``OwnershipSchedule.balanced`` weighted by 1/speed)
     adapt_schedule: bool = False
+    #: numerical-divergence quarantine (DESIGN.md §14): on a tripped
+    #: sentinel, roll back to the last good checkpoint / session round,
+    #: back the step size off and retry
+    divergence: Optional[DivergencePolicy] = None
 
     def __post_init__(self):
         if not self.checkpoint_dir:
             raise ValueError("FaultPolicy requires a checkpoint_dir")
+        if self.divergence is not None and not isinstance(
+                self.divergence, DivergencePolicy):
+            raise TypeError(
+                f"divergence must be a DivergencePolicy, got "
+                f"{type(self.divergence).__name__}")
         if self.checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got "
@@ -864,18 +970,52 @@ def _solve_faulted(problem: MCProblem, config: SolverConfig, *, mesh,
             warm = restored
             traces.append((restored.trace_epochs, restored.trace_rmse))
     res = warm
+    div = faults.divergence
+    rollbacks = 0
+    n_rollbacks = 0
+    ref_rmse = None     # last good block's final held-out RMSE
+    if warm is not None and len(warm.trace_rmse):
+        ref_rmse = float(warm.trace_rmse[-1])
     while done < total:
         chunk = min(faults.checkpoint_every, total - done)
-        res = solve(problem, dataclasses.replace(config, epochs=chunk),
-                    mesh=mesh, warm_start=warm, verbose=verbose)
+        cfg_chunk = dataclasses.replace(config, epochs=chunk)
+        if div is not None:
+            cfg_chunk = div.backed_off(cfg_chunk, rollbacks)
+        res = solve(problem, cfg_chunk, mesh=mesh, warm_start=warm,
+                    verbose=verbose)
+        if div is not None and div.tripped(res, ref_rmse):
+            # divergence quarantine: discard the block, fall back to
+            # the last good state (``warm`` — the previous committed
+            # checkpoint / warm start), back the step size off, retry
+            if rollbacks >= div.max_rollbacks:
+                raise DivergenceError(
+                    f"block at epoch {base + done} still diverged after "
+                    f"{rollbacks} rollbacks (alpha backed off to "
+                    f"{div.backoff ** rollbacks:g}x)")
+            rollbacks += 1
+            n_rollbacks += 1
+            if verbose:
+                print(f"divergence tripped at epoch {base + done}; "
+                      f"rolling back (retry {rollbacks})")
+            continue
+        rollbacks = 0   # a good block re-arms the retry budget
+        if len(res.trace_rmse):
+            ref_rmse = float(res.trace_rmse[-1])
         done += chunk
         traces.append((res.trace_epochs, res.trace_rmse))
         # the running checkpoint carries the *accumulated* trace so a
-        # resumed run's history is the uninterrupted run's history
+        # resumed run's history is the uninterrupted run's history.
+        # The stamped config is the caller's (unscaled) one: divergence
+        # detection is deterministic, so a crash-resumed run replays
+        # the same rollbacks — and the resume vouch-check above keeps
+        # working.
         res = dataclasses.replace(
-            res,
+            res, config=dataclasses.replace(config, epochs=chunk),
             trace_epochs=np.concatenate([t for t, _ in traces]),
             trace_rmse=np.concatenate([r for _, r in traces]))
+        if n_rollbacks:
+            res.extras["divergence"] = dict(
+                res.extras.get("divergence", {}), rollbacks=n_rollbacks)
         save_fit_result(faults.checkpoint_dir, done, res)
         gc_checkpoints(faults.checkpoint_dir, faults.keep)
         warm = res
@@ -985,7 +1125,10 @@ def _nomad_run(eng, config: NomadConfig, test, start,
     W, H = eng.factors()
     epochs, rmses = _as_trace_arrays(trace)
     return FitResult(W=W, H=H, trace_epochs=epochs, trace_rmse=rmses,
-                     epochs_done=int(start) + int(config.epochs))
+                     epochs_done=int(start) + int(config.epochs),
+                     extras={"divergence": {
+                         "finite": bool(getattr(eng, "last_finite",
+                                                True))}})
 
 
 def _streaming_repack(base_br, base_problem: MCProblem,
@@ -1212,6 +1355,8 @@ def _solve_async_sim(problem: MCProblem, config: AsyncSimConfig, *,
               "trace_virtual_time": np.asarray(
                   [t for t, _, _ in res.trace], dtype=np.float64),
               "update_log": res.update_log}
+    if res.transport is not None:
+        extras["transport"] = res.transport
     if config.emit_schedule:
         # compile the simulated ownership transfers into a schedule the
         # real engine replays.  The item blocks are the nnz-balanced
@@ -1302,6 +1447,14 @@ class StreamingSession:
         self._replaying = False
         self._schedule_spec = (config.schedule
                                if isinstance(config, NomadConfig) else None)
+        # log compaction (DESIGN.md §14): the replay log holds rounds
+        # [_base_round, _base_round + len(_replay_log)); once every
+        # retained committed checkpoint has advanced past a snapshotted
+        # round, the session re-bases there and drops the prefix
+        self._base_round = 0
+        self._base_spec = self._schedule_spec
+        self._base_result: Optional[FitResult] = None
+        self._snapshots: dict = {}
         self._monitor = None
         if faults is not None and faults.monitor \
                 and isinstance(config, NomadConfig):
@@ -1356,6 +1509,55 @@ class StreamingSession:
                 f"{type(self.config).__name__}")
         return self.config
 
+    def _nomad_round(self, cfg: NomadConfig, runner) -> FitResult:
+        """One NOMAD training round under the divergence quarantine
+        (``faults.divergence``, DESIGN.md §14): capture the pre-round
+        factors, run, and if the round trips the sentinel restore them,
+        back off the step-size schedule and retry — up to
+        ``max_rollbacks`` times, then :class:`DivergenceError`.
+        Detection and backoff are deterministic (same factors, same
+        schedule → same trip), so a :meth:`kill` recovery replay
+        re-executes the identical rollbacks and lands on the same
+        state."""
+        div = self.faults.divergence if self.faults is not None else None
+        if div is None:
+            return runner(cfg)
+        eng = self._eng
+        W_prev, H_prev = eng.factors()      # pre-round rollback anchor
+        if not (np.isfinite(W_prev).all() and np.isfinite(H_prev).all()):
+            # the live engine state itself is corrupt (e.g. the chaos
+            # harness's 'nan' injection): anchor on the last completed
+            # round's factors instead, when their shapes still match
+            r = self.result
+            if r is not None \
+                    and np.asarray(r.W).shape == W_prev.shape \
+                    and np.asarray(r.H).shape == H_prev.shape:
+                W_prev, H_prev = np.asarray(r.W), np.asarray(r.H)
+        ref = None
+        if self.result is not None and len(self.result.trace_rmse):
+            ref = float(self.result.trace_rmse[-1])
+        rollbacks = 0
+        while True:
+            sched0 = eng.stepsize
+            eng.stepsize = div.backed_off(cfg, rollbacks).make_stepsize()
+            try:
+                res = runner(cfg)
+            finally:
+                eng.stepsize = sched0
+            if not div.tripped(res, ref):
+                res.extras.setdefault("divergence",
+                                      {})["rollbacks"] = rollbacks
+                return res
+            if rollbacks >= div.max_rollbacks:
+                raise DivergenceError(
+                    f"streaming round still diverged after {rollbacks} "
+                    f"rollback/backoff retries "
+                    f"(backoff={div.backoff})")
+            rollbacks += 1
+            eng.init_factors(
+                np.asarray(W_prev, dtype=self.problem.dtype),
+                np.asarray(H_prev, dtype=self.problem.dtype))
+
     def fit(self, epochs=None) -> FitResult:
         """Run ``epochs`` (default ``config.epochs``) on the current data
         — the cold start, or further refinement between arrivals."""
@@ -1364,8 +1566,9 @@ class StreamingSession:
         if isinstance(cfg, NomadConfig):
             self._ensure_engine()
             start = 0 if self.result is None else self.result.epochs_done
-            res = _nomad_run(self._eng, cfg, self.problem.test, start,
-                             self.verbose)
+            res = self._nomad_round(
+                cfg, lambda c: _nomad_run(self._eng, c, self.problem.test,
+                                          start, self.verbose))
         else:
             res = solve(self.problem, cfg, mesh=self.mesh,
                         warm_start=self.result, verbose=self.verbose)
@@ -1387,8 +1590,10 @@ class StreamingSession:
             self._ensure_engine()       # warm_start sessions skip fit()
             br = _streaming_repack(self._eng.br, self.problem, delta, cfg)
             self._eng.grow(br, seed=cfg.seed)
-            res = _nomad_run(self._eng, cfg, delta.merged_test,
-                             self.result.epochs_done, self.verbose)
+            res = self._nomad_round(
+                cfg, lambda c: _nomad_run(self._eng, c, delta.merged_test,
+                                          self.result.epochs_done,
+                                          self.verbose))
             # pin the sticky partition (pack cache seeded with br) so any
             # batch re-solve of the session's problem replays the
             # identical serial order without re-packing history
@@ -1471,20 +1676,29 @@ class StreamingSession:
             if restored is None:
                 step = 0
         log = self._replay_log
-        if step > len(log):
+        # the log holds rounds [_base_round, _base_round + len(log));
+        # with no usable checkpoint, cold-replay the whole window from
+        # the base snapshot (bitwise: the base factors are the round-
+        # ``_base_round`` state the original run trained from)
+        local = 0 if restored is None else step - self._base_round
+        if local < 0 or local > len(log):
             raise ValueError(
-                f"checkpoint is at round {step} but the session only "
-                f"logged {len(log)} rounds")
+                f"checkpoint is at round {step} but the session log "
+                f"covers rounds [{self._base_round}, "
+                f"{self._base_round + len(log)}]")
         self.problem = self._base_problem
         self.config = self._base_config
-        self._schedule_spec = self._base_config.schedule
-        self.result = self._warm0       # replay starts where __init__ did
+        self._schedule_spec = self._base_spec
+        # replay starts where __init__ did — or, after log compaction,
+        # at the in-memory base snapshot's round
+        self.result = (self._base_result if self._base_round > 0
+                       else self._warm0)
         self.history = []
         self._eng = None
         self._replay_log = []
         self._replaying = True
         try:
-            for op in log[:step]:
+            for op in log[:local]:
                 self._apply_op(op, structural=True)
             if restored is not None:
                 # the structural replay has rebuilt the session config as
@@ -1502,7 +1716,7 @@ class StreamingSession:
                     np.asarray(restored.W, dtype=self.problem.dtype),
                     np.asarray(restored.H, dtype=self.problem.dtype))
                 self.result = restored
-            for op in log[step:]:
+            for op in log[local:]:
                 self._apply_op(op)
         finally:
             self._replaying = False
@@ -1649,21 +1863,57 @@ class StreamingSession:
         self._replay_log.append(op)
         f = self.faults
         if f is not None and self.result is not None \
-                and len(self._replay_log) % f.checkpoint_every == 0:
+                and (self._base_round + len(self._replay_log)) \
+                % f.checkpoint_every == 0:
             self.checkpoint()
 
     def checkpoint(self) -> int:
         """Atomically checkpoint the current result at the current round
         (step = rounds completed), GC'ing to ``faults.keep``; returns the
         step.  Called automatically every ``faults.checkpoint_every``
-        rounds."""
+        rounds.  Each checkpoint also snapshots the session's structural
+        state and compacts the kill-recovery round log down to the
+        oldest retained committed step, so the log stays bounded by
+        ``keep * checkpoint_every`` rounds on a long-lived session."""
         if self.faults is None:
             raise RuntimeError(
                 "no FaultPolicy attached; pass faults= to the session")
         if self.result is None:
             raise RuntimeError("nothing to checkpoint yet; call fit()")
         from .checkpoint.checkpoint import gc_checkpoints, save_fit_result
-        step = len(self._replay_log)
-        save_fit_result(self.faults.checkpoint_dir, step, self.result)
+        step = self._base_round + len(self._replay_log)
+        # stamp the *session* config, not the last fit round's: when the
+        # newest logged op is structural (resize/adapt), the recovery
+        # replay vouches the checkpoint against the post-op config
+        save_fit_result(self.faults.checkpoint_dir, step,
+                        dataclasses.replace(self.result,
+                                            config=self.config))
         gc_checkpoints(self.faults.checkpoint_dir, self.faults.keep)
+        self._snapshots[step] = (self.problem, self.config,
+                                 self._schedule_spec, self.result)
+        self._compact()
         return step
+
+    def _compact(self):
+        """Bound the kill-recovery round log: once the oldest *retained*
+        committed checkpoint has advanced past the current base round,
+        re-base the session on the structural snapshot taken at that
+        step and drop the log prefix it covers.  Recovery from any
+        retained checkpoint — and cold replay from the in-memory base
+        snapshot when every retained checkpoint is corrupt — stays
+        bitwise identical; only rounds older than every retained
+        checkpoint become unreachable."""
+        from .checkpoint.checkpoint import committed_steps
+        steps = committed_steps(self.faults.checkpoint_dir)
+        if not steps:
+            return
+        smin = steps[0]
+        snap = self._snapshots.get(smin)
+        if smin <= self._base_round or snap is None:
+            return
+        self._replay_log = self._replay_log[smin - self._base_round:]
+        (self._base_problem, self._base_config, self._base_spec,
+         self._base_result) = snap
+        self._base_round = smin
+        self._snapshots = {s: v for s, v in self._snapshots.items()
+                           if s >= smin}

@@ -1,6 +1,10 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step, \
-    AsyncCheckpointer, save_fit_result, restore_fit_result, gc_checkpoints
+    committed_steps, AsyncCheckpointer, save_fit_result, \
+    restore_fit_result, gc_checkpoints, verify_checkpoint, \
+    quarantine_checkpoint, latest_verified_step, CorruptCheckpointError
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer", "save_fit_result", "restore_fit_result",
-           "gc_checkpoints"]
+           "committed_steps", "AsyncCheckpointer", "save_fit_result",
+           "restore_fit_result", "gc_checkpoints", "verify_checkpoint",
+           "quarantine_checkpoint", "latest_verified_step",
+           "CorruptCheckpointError"]

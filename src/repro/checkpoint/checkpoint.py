@@ -33,10 +33,16 @@ import jax.numpy as jnp
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """An explicitly-requested checkpoint step failed integrity
+    verification (checksum mismatch, missing array, unreadable shard)."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -54,6 +60,10 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _array_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     shard_id: int = 0, n_shards: int = 1,
                     extra: Optional[dict] = None) -> str:
@@ -62,6 +72,16 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
     os.makedirs(tmp_dir, exist_ok=True)
     flat = _flatten(tree)
     np.savez(os.path.join(tmp_dir, f"shard_{shard_id}.npz"), **flat)
+    # per-array checksum manifest (DESIGN.md §14): verified on restore,
+    # so silent on-disk corruption quarantines the step instead of
+    # booting garbage factors
+    manifest = {"shard": f"shard_{shard_id}.npz",
+                "arrays": {key: {"crc": _array_crc(arr),
+                                 "dtype": str(arr.dtype),
+                                 "shape": list(arr.shape)}
+                           for key, arr in flat.items()}}
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
     meta = {"step": step, "n_shards": n_shards, "extra": extra or {}}
     with open(os.path.join(tmp_dir, "meta.json"), "w") as f:
         json.dump(meta, f)
@@ -74,18 +94,68 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
     return step_dir
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
-    """Newest *committed* step in ``ckpt_dir``, or ``None``.
+def verify_checkpoint(ckpt_dir: str, step: int,
+                      shard_id: int = 0) -> bool:
+    """Integrity check of one committed step against its checksum
+    manifest.  ``True`` for pre-integrity checkpoints (no manifest —
+    nothing to verify against, backwards compatible); ``False`` on any
+    checksum mismatch, missing/misshapen array, or unreadable shard
+    (a bit flip that breaks the zip structure counts as corruption,
+    not as an error)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    man_path = os.path.join(step_dir, "manifest.json")
+    if not os.path.exists(man_path):
+        return True
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(step_dir,
+                                  f"shard_{shard_id}.npz")) as data:
+            for key, ent in manifest["arrays"].items():
+                if key not in data.files:
+                    return False
+                arr = data[key]
+                if (list(arr.shape) != ent["shape"]
+                        or str(arr.dtype) != ent["dtype"]
+                        or _array_crc(arr) != ent["crc"]):
+                    return False
+    except Exception:
+        return False
+    return True
 
-    This is the serving/restore boot contract: ``.tmp`` staging dirs,
-    torn step dirs without a COMMITTED marker (a crash mid-write — by
-    the same reasoning ``gc_checkpoints`` leaves newer torn dirs alone,
-    they may be writes in flight) and unparseable ``step_*`` names are
-    all skipped, so a server booting while a training process is still
-    publishing always lands on a complete checkpoint (regression-tested
-    in tests/test_checkpoint.py and tests/test_serve.py)."""
+
+def quarantine_checkpoint(ckpt_dir: str, step: int) -> str:
+    """Move a corrupted step out of the restore scan's sight:
+    ``step_<N>`` → ``step_<N>.corrupt``.  The suffixed name no longer
+    parses as a step (``latest_step`` and ``gc_checkpoints`` both skip
+    it), so restore falls back to the newest *verified* committed step —
+    but the bytes stay on disk for postmortems."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    dst = step_dir + ".corrupt"
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.rename(step_dir, dst)
+    return dst
+
+
+def latest_verified_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step that passes :func:`verify_checkpoint`.
+    Corrupted newer steps are quarantined as a side effect, so the scan
+    converges and later callers don't re-verify known-bad dirs."""
+    while True:
+        step = latest_step(ckpt_dir)
+        if step is None or verify_checkpoint(ckpt_dir, step):
+            return step
+        quarantine_checkpoint(ckpt_dir, step)
+
+
+def committed_steps(ckpt_dir: str) -> list:
+    """Sorted step numbers of every committed checkpoint in
+    ``ckpt_dir``.  ``.tmp`` staging dirs, torn step dirs without a
+    COMMITTED marker and unparseable ``step_*`` names (which includes
+    quarantined ``step_<N>.corrupt`` dirs) are all skipped."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if not name.startswith("step_") or name.endswith(".tmp") or \
@@ -96,7 +166,21 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             steps.append(int(name.split("_")[1]))
         except (IndexError, ValueError):
             continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *committed* step in ``ckpt_dir``, or ``None``.
+
+    This is the serving/restore boot contract: ``.tmp`` staging dirs,
+    torn step dirs without a COMMITTED marker (a crash mid-write — by
+    the same reasoning ``gc_checkpoints`` leaves newer torn dirs alone,
+    they may be writes in flight) and unparseable ``step_*`` names are
+    all skipped, so a server booting while a training process is still
+    publishing always lands on a complete checkpoint (regression-tested
+    in tests/test_checkpoint.py and tests/test_serve.py)."""
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def gc_checkpoints(ckpt_dir: str, keep: int) -> None:
@@ -145,11 +229,18 @@ def gc_checkpoints(ckpt_dir: str, keep: int) -> None:
 def restore_checkpoint(ckpt_dir: str, tree_like: Any,
                        step: Optional[int] = None, shard_id: int = 0):
     """Restore into the structure of ``tree_like`` (shapes must match).
-    Returns (tree, step) or (None, None) when nothing committed exists."""
+    Returns (tree, step) or (None, None) when nothing committed exists.
+    Without an explicit ``step`` the newest *verified* committed step is
+    loaded (corrupted ones are quarantined and skipped); an explicitly
+    requested corrupted step raises :class:`CorruptCheckpointError`."""
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_verified_step(ckpt_dir)
         if step is None:
             return None, None
+    elif not verify_checkpoint(ckpt_dir, step):
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} in {ckpt_dir} failed integrity "
+            f"verification")
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(step_dir, f"shard_{shard_id}.npz"))
     paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
@@ -174,10 +265,20 @@ def _encode_value(v):
     from ..core.schedule import OwnershipSchedule
     from ..core.stepsize import PowerSchedule
     from ..kernels.policy import KernelPolicy
+    from ..runtime.chaos import DegradedLink, LinkEvent
+    from ..runtime.transport import TransportConfig
     if isinstance(v, PowerSchedule):
         return {"__type__": "PowerSchedule", **dataclasses.asdict(v)}
     if isinstance(v, KernelPolicy):
         return {"__type__": "KernelPolicy", **dataclasses.asdict(v)}
+    if isinstance(v, TransportConfig):
+        return {"__type__": "TransportConfig", **dataclasses.asdict(v)}
+    if isinstance(v, LinkEvent):
+        return {"__type__": "LinkEvent", **dataclasses.asdict(v)}
+    if isinstance(v, DegradedLink):
+        return {"__type__": "DegradedLink",
+                "events": [_encode_value(e) for e in v.events],
+                "delay_factor": v.delay_factor, **v.rates}
     if isinstance(v, OwnershipSchedule):
         return {"__type__": "OwnershipSchedule", "p": int(v.p),
                 "name": v.name,
@@ -202,12 +303,26 @@ def _decode_value(v):
     from ..core.schedule import OwnershipSchedule
     from ..core.stepsize import PowerSchedule
     from ..kernels.policy import KernelPolicy
+    from ..runtime.chaos import DegradedLink, LinkEvent
+    from ..runtime.transport import TransportConfig
     t = v["__type__"]
     if t == "PowerSchedule":
         return PowerSchedule(alpha=v["alpha"], beta=v["beta"])
     if t == "KernelPolicy":
         return KernelPolicy(**{k: x for k, x in v.items()
                                if k != "__type__"})
+    if t == "TransportConfig":
+        return TransportConfig(**{k: x for k, x in v.items()
+                                  if k != "__type__"})
+    if t == "LinkEvent":
+        return LinkEvent(**{k: x for k, x in v.items()
+                            if k != "__type__"})
+    if t == "DegradedLink":
+        return DegradedLink(
+            [_decode_value(e) for e in v["events"]],
+            drop=v["drop"], dup=v["dup"], reorder=v["reorder"],
+            corrupt=v["corrupt"], delay=v["delay"],
+            delay_factor=v["delay_factor"])
     if t == "OwnershipSchedule":
         return OwnershipSchedule(
             p=v["p"], table=np.asarray(v["table"], dtype=np.int32),
@@ -270,11 +385,22 @@ def restore_fit_result(ckpt_dir: str,
     or ``(None, None)`` when no committed step exists.  The restored
     result warm-starts ``solve``/``partial_fit`` bitwise-identically to
     the run it was saved from (same factors, same ``epochs_done`` for the
-    step-size schedule, same config object graph)."""
+    step-size schedule, same config object graph).
+
+    Integrity (DESIGN.md §14): without an explicit ``step`` the newest
+    *verified* committed step is restored — a corrupted latest
+    checkpoint is quarantined (``step_<N>.corrupt``) and the scan falls
+    back to the previous good one, so a bit-flipped checkpoint never
+    boots.  An explicitly requested corrupted step raises
+    :class:`CorruptCheckpointError`."""
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_verified_step(ckpt_dir)
         if step is None:
             return None, None
+    elif not verify_checkpoint(ckpt_dir, step):
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} in {ckpt_dir} failed integrity "
+            f"verification")
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(step_dir, "meta.json")) as f:
         meta = json.load(f)["extra"]["fit_result"]

@@ -72,6 +72,23 @@ class SimConfig:
     #: shipments) by source/destination placement, with per-link
     #: contention tracked in virtual time.
     topology: Optional[NetworkModel] = None
+    #: integrity transport (DESIGN.md §14).  ``None`` ships nomadic
+    #: items over the historical perfect channel — the zero-cost path,
+    #: bitwise-identical event structure.  A
+    #: :class:`~repro.runtime.transport.TransportConfig` seals every
+    #: transfer in a sequence-numbered CRC32 envelope; without
+    #: ``link_faults`` the channel stays perfect (delivery events are
+    #: the historical ones — still bitwise), with ``link_faults`` the
+    #: full at-least-once machinery runs (acknowledgement hops,
+    #: exponential-backoff retransmits, receiver dedup — NOMAD mode
+    #: only).
+    transport: Optional["TransportConfig"] = None  # noqa: F821
+    #: :class:`~repro.runtime.chaos.DegradedLink` message-fault model
+    #: (scripted + seeded drop/duplicate/reorder/corrupt/delay).
+    #: Requires (or implies) ``transport``; every fault script still
+    #: yields an exactly-serializable history — property-tested in
+    #: tests/test_transport.py.
+    link_faults: Optional["DegradedLink"] = None   # noqa: F821
 
 
 @dataclasses.dataclass
@@ -89,6 +106,9 @@ class SimResult:
     #: these into a schedule the real engine replays (NOMAD mode only)
     visit_log: List[Tuple[float, int, int]] = dataclasses.field(
         default_factory=list)
+    #: integrity-transport counters (``TransportStats.as_dict()``) when
+    #: ``SimConfig.transport`` is set; ``None`` on the legacy channel
+    transport: Optional[Dict[str, int]] = None
 
 
 class NomadSimulator:
@@ -179,6 +199,133 @@ class NomadSimulator:
         heap: List[Tuple[float, int, str, int, int]] = []  # (t, seq, kind, j, q)
         seq = 0
 
+        # ------------------------------------------------------------- #
+        # integrity transport (DESIGN.md §14).  Three channel modes:
+        #   tcfg None              — the historical perfect channel; the
+        #                            exact legacy event pushes (bitwise).
+        #   tcfg set, link None    — every transfer sealed in a CRC32
+        #                            envelope and verified at delivery,
+        #                            but the delivery event is still the
+        #                            single historical "arrive" (same
+        #                            time, same seq draw) — results stay
+        #                            bitwise-identical to tcfg None.
+        #   link set               — full at-least-once machinery: each
+        #                            transfer becomes a tracked message
+        #                            with "xmit" (delivery attempt),
+        #                            "ack" and "retx" (timer) events, all
+        #                            hops priced through ship(); faults
+        #                            drawn from link_state; the
+        #                            ItemLedger's (item, version) dedup
+        #                            keeps circulation exactly-once.
+        # ------------------------------------------------------------- #
+        tcfg, link = cfg.transport, cfg.link_faults
+        if link is not None and tcfg is None:
+            from ..runtime.transport import TransportConfig
+            tcfg = TransportConfig()
+        ledger = None
+        link_state = None
+        inline_env: Dict[int, object] = {}
+        evt_env: Dict[int, object] = {}
+        msgs: Dict[int, dict] = {}
+        next_msg = [0]
+        if tcfg is not None:
+            from ..runtime import transport as _tp
+            timeout = (tcfg.timeout if tcfg.timeout is not None
+                       else tcfg.timeout_hops * cfg.c * k)
+            ledger = _tp.ItemLedger(self.n)
+            if link is not None:
+                link_state = link.state(cfg.seed)
+                # transport internals never touch self.rng, so enabling
+                # faults cannot perturb the routing draw sequence
+                tx_rng = np.random.default_rng((cfg.seed, 0x7417))
+
+        def deliver(jj: int, dq: int, t: float):
+            """Item jj joins dq's queue — the post-accept half of the
+            historical "arrive" handling."""
+            was_idle = dq not in self._pending
+            queues[dq].append(jj)
+            if was_idle:
+                start_next(dq, max(t, clock[dq]))
+
+        def push_evt(t_e: float, kind_e: str, mid: int, q_e: int,
+                     env=None):
+            nonlocal seq
+            seq += 1
+            if env is not None:
+                evt_env[seq] = env
+            heapq.heappush(heap, (t_e, seq, kind_e, mid, q_e))
+
+        def transmit(mid: int, t: float):
+            """One wire attempt for message mid: draw link faults, price
+            the hop, arm the retransmission timer."""
+            m = msgs[mid]
+            m["attempts"] += 1
+            st = ledger.stats
+            st.transmissions += 1
+            env = _tp.seal(m["src"], m["dst"], mid,
+                           _tp.encode_item(m["j"], m["ver"]))
+            t_d = ship(m["src"], m["dst"], t)
+            hop = max(t_d - t, 1e-9)
+            faults = ([] if m["reliable"]
+                      else link_state.draw(m["src"], m["dst"], t))
+            kinds = {kd for kd, _ in faults}
+            # a held (reordered) predecessor is released onto the wire
+            # just behind this transit of its link
+            lk = (m["src"], m["dst"])
+            held = link_state.held.pop(lk, None)
+            t_arr = t_d
+            for kd, factor in faults:
+                if kd == "delay":
+                    t_arr += factor * hop
+            if "corrupt" in kinds:
+                env = env.corrupted(
+                    int(tx_rng.integers(8 * len(env.payload))))
+            if "drop" in kinds:
+                st.dropped += 1
+            elif "reorder" in kinds:
+                # hold this copy until the next message transits the
+                # same link — the receiver then observes genuinely
+                # inverted send order
+                link_state.held[lk] = (mid, m["dst"], env, t_arr)
+            else:
+                push_evt(t_arr, "xmit", mid, m["dst"], env)
+                if "dup" in kinds:
+                    push_evt(t_arr, "xmit", mid, m["dst"], env)
+            if held is not None:
+                hmid, hdst, henv, h_arr = held
+                push_evt(max(t_d, h_arr) + 1e-9, "xmit", hmid, hdst,
+                         henv)
+            # at-least-once: the timer always arms, exponential backoff
+            push_evt(t + tcfg.retry_delay(timeout, m["attempts"]),
+                     "retx", mid, m["src"])
+
+        def send_item(src: int, dst: int, jj: int, t: float,
+                      reliable: bool = False):
+            """Route item jj src→dst over the configured channel."""
+            nonlocal seq
+            if tcfg is None:
+                seq += 1
+                heapq.heappush(heap, (ship(src, dst, t), seq, "arrive",
+                                      jj, dst))
+                return
+            if link_state is None:
+                # envelope-only path: seal + verify, perfect link — the
+                # one delivery event is the historical one
+                ver = ledger.launch(jj)
+                ledger.stats.transmissions += 1
+                seq += 1
+                inline_env[seq] = _tp.seal(src, dst, seq,
+                                           _tp.encode_item(jj, ver))
+                heapq.heappush(heap, (ship(src, dst, t), seq, "arrive",
+                                      jj, dst))
+                return
+            ver = ledger.launch(jj)
+            next_msg[0] += 1
+            mid = next_msg[0]
+            msgs[mid] = dict(j=jj, ver=ver, src=src, dst=dst,
+                             attempts=0, acked=False, reliable=reliable)
+            transmit(mid, t)
+
         # prime: every worker starts working on its queue head at t=0
         # events: ('finish', j, q) worker q finished processing item j
         #         ('arrive', j, q) item j arrives at worker q's queue
@@ -232,7 +379,7 @@ class NomadSimulator:
         n_life = 0
 
         while heap and n_updates < target_updates:
-            t, _, kind, j, q = heapq.heappop(heap)
+            t, eseq, kind, j, q = heapq.heappop(heap)
             sim_time = t
 
             # lifecycle injection (failures and rejoins)
@@ -247,16 +394,12 @@ class NomadSimulator:
                     # re-enqueue this worker's nomadic items to survivors
                     for item in queues[fq]:
                         tgt = int(rng.choice(survivors))
-                        seq += 1
-                        heapq.heappush(heap, (ship(fq, tgt, ft), seq,
-                                              "arrive", item, tgt))
+                        send_item(fq, tgt, item, ft)
                     queues[fq].clear()
                     if fq in self._pending:   # in-flight item is lost & resent
                         item, _, _ = self._pending.pop(fq)
                         tgt = int(rng.choice(survivors))
-                        seq += 1
-                        heapq.heappush(heap, (ship(fq, tgt, ft), seq,
-                                              "arrive", item, tgt))
+                        send_item(fq, tgt, item, ft)
                     # row ownership moves to a survivor (elastic re-shard)
                     heir = int(survivors[0])
                     moved = np.flatnonzero(self.row_owner == fq)
@@ -335,6 +478,57 @@ class NomadSimulator:
                         else np.concatenate([seg, [g]]))
                 continue
 
+            if kind in ("xmit", "ack", "retx"):
+                # full-machinery transport events (link_faults active);
+                # j is the message id here, q its addressee
+                m = msgs[j]
+                st = ledger.stats
+                if kind == "ack":
+                    m["acked"] = True
+                elif kind == "retx":
+                    if not (m["acked"]
+                            or ledger.delivered(m["j"], m["ver"])
+                            or m["ver"] < ledger.version(m["j"])):
+                        live = np.flatnonzero(alive)
+                        if m["attempts"] > tcfg.max_retries:
+                            # retry budget exhausted: reliable re-routed
+                            # delivery — an adversarial drop script can
+                            # delay an item but never starve it out of
+                            # circulation
+                            st.reroutes += 1
+                            send_item(m["src"] if alive[m["src"]]
+                                      else int(live[0]),
+                                      int(tx_rng.choice(live)),
+                                      m["j"], t, reliable=True)
+                        elif not alive[m["src"]] or not alive[m["dst"]]:
+                            # an endpoint died: open a fresh transfer
+                            # (version bump) between live workers — any
+                            # late copy of this one is now stale and the
+                            # ledger discards it, so the item can never
+                            # enter circulation twice
+                            st.reroutes += 1
+                            send_item(m["src"] if alive[m["src"]]
+                                      else int(live[0]),
+                                      int(tx_rng.choice(live)),
+                                      m["j"], t)
+                        else:
+                            st.retransmits += 1
+                            transmit(j, t)
+                else:  # xmit: one delivery attempt lands at its dst
+                    env = evt_env.pop(eseq)
+                    if alive[q]:
+                        if not env.verify():
+                            # checksum failure == drop; the sender's
+                            # retransmission timer covers it
+                            st.corrupt += 1
+                        else:
+                            jj, ver = _tp.decode_item(env.payload)
+                            if ledger.accept(jj, ver):
+                                push_evt(ship(q, m["src"], t), "ack",
+                                         j, m["src"])
+                                deliver(jj, q, t)
+                continue
+
             if not alive[q]:
                 if kind == "arrive":
                     # the delivery raced a failure: the message was in
@@ -346,18 +540,24 @@ class NomadSimulator:
                     # survivor with one more priced hop instead.  Only
                     # the arrival time moves, so the start-time
                     # linearization (and serializability) is preserved.
+                    inline_env.pop(eseq, None)   # re-sealed on forward
                     live = np.flatnonzero(alive)
                     tgt = int(rng.choice(live))
-                    seq += 1
-                    heapq.heappush(heap, (ship(q, tgt, t), seq, "arrive",
-                                          j, tgt))
+                    send_item(q, tgt, j, t)
                 continue
 
             if kind == "arrive":
-                was_idle = q not in self._pending
-                queues[q].append(j)
-                if was_idle:
-                    start_next(q, max(t, clock[q]))
+                env = inline_env.pop(eseq, None)
+                if env is not None:
+                    # envelope-only path: verify at delivery (perfect
+                    # link, so failure is impossible — the check prices
+                    # the CRC and keeps the ledger's books honest)
+                    if env.verify():
+                        ledger.accept(*_tp.decode_item(env.payload))
+                    else:  # pragma: no cover - no corruption source
+                        ledger.stats.corrupt += 1
+                        continue
+                deliver(j, q, t)
             else:  # finish
                 if q not in self._pending or self._pending[q][0] != j:
                     continue  # stale event (e.g. re-routed at failure)
@@ -385,9 +585,7 @@ class NomadSimulator:
                     dest = int(rng.choice(live, p=w / w.sum()))
                 else:
                     dest = int(rng.choice(live))
-                seq += 1
-                heapq.heappush(heap, (ship(q, dest, t), seq, "arrive", j,
-                                      dest))
+                send_item(q, dest, j, t)
                 start_next(q, t)
 
                 if self.test is not None and n_updates >= record_at:
@@ -416,7 +614,9 @@ class NomadSimulator:
         return SimResult(W=self.W, H=self.H, update_log=update_log,
                          n_updates=n_updates, sim_time=sim_time,
                          busy_time=busy, trace=trace, throughput=thpt,
-                         visit_log=visit_log)
+                         visit_log=visit_log,
+                         transport=(None if ledger is None
+                                    else ledger.stats.as_dict()))
 
 
 # ---------------------------------------------------------------------- #

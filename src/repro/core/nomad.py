@@ -217,6 +217,13 @@ def _fused_driver(epoch_body):
     for the entire block is the caller reading the returned trace —
     versus one blocking ``float(...)`` per epoch on the loop path.
     ``Ws``/``Hs`` are donated: epochs update the factor shards in place.
+
+    The driver also carries the on-device divergence sentinel
+    (DESIGN.md §14): a single ``ok`` flag AND-folded across epochs with
+    the all-finiteness of both factor blocks.  NaN/Inf is absorbing
+    through SGD updates, so one flag per block is exact — the returned
+    ``ok`` is False iff any epoch in the block produced a non-finite
+    entry.  It rides the existing scan carry: no extra host sync.
     """
     @functools.partial(jax.jit, static_argnames=("policy", "n_rec"),
                        donate_argnums=(0, 1))
@@ -224,22 +231,24 @@ def _fused_driver(epoch_body):
               policy: KernelPolicy = KernelPolicy(impl="xla"),
               entry=None, n_rec: int = 0):
         trace = jnp.zeros((n_rec,), dtype=jnp.float32)
+        ok = jnp.array(True)
 
         def epoch(carry, inp):
-            Ws, Hs, trace = carry
+            Ws, Hs, trace, ok = carry
             lr, pos = inp
             Ws, Hs = epoch_body(Ws, Hs, data, lr, lam, policy, entry)
+            ok &= jnp.isfinite(Ws).all() & jnp.isfinite(Hs).all()
             if n_rec:
                 trace = jax.lax.cond(
                     pos >= 0,
                     lambda tr: tr.at[pos].set(
                         _sharded_rmse_body(Ws, Hs, ridx, cidx, tvals)),
                     lambda tr: tr, trace)
-            return (Ws, Hs, trace), ()
+            return (Ws, Hs, trace, ok), ()
 
-        (Ws, Hs, trace), _ = jax.lax.scan(epoch, (Ws, Hs, trace),
-                                          (lrs, rec_pos))
-        return Ws, Hs, trace
+        (Ws, Hs, trace, ok), _ = jax.lax.scan(epoch, (Ws, Hs, trace, ok),
+                                              (lrs, rec_pos))
+        return Ws, Hs, trace, ok
 
     return train
 
@@ -399,6 +408,13 @@ class NomadRingEngine:
     mesh: Optional[Mesh] = None    # if given, run shard_map on axis 'workers'
     policy: Optional[KernelPolicy] = None  # overrides impl/sub_blocks
 
+    #: divergence sentinel (DESIGN.md §14): False once any train() call
+    #: left a non-finite entry in the factor shards.  Fused dispatch
+    #: folds the check into the scan carry (no extra host sync); the
+    #: loop path checks once per train() call — exact either way, since
+    #: NaN/Inf is absorbing through SGD updates.
+    last_finite: bool = True
+
     def __post_init__(self):
         if self.policy is None:
             self.policy = KernelPolicy.coerce(self.impl,
@@ -549,6 +565,7 @@ class NomadRingEngine:
         self.init_factors(W, H)
 
     def init_factors(self, W0: np.ndarray, H0: np.ndarray):
+        self.last_finite = True     # fresh factors, fresh sentinel
         Ws, Hs = part.shard_factors(W0, H0, self.br)
         # mixed policies store the shards low-precision (fp32 policies
         # take the historical no-cast path)
@@ -671,6 +688,12 @@ class NomadRingEngine:
                 trace.append((self.epoch_idx, r))
                 if verbose:
                     print(f"epoch {self.epoch_idx}: test rmse {r:.4f}")
+        # divergence sentinel: non-finite entries are absorbing through
+        # SGD updates, so one end-of-call check is exact (and the only
+        # extra sync the loop path pays)
+        if epochs > 0:
+            self.last_finite = bool(jnp.isfinite(self.Ws).all()
+                                    & jnp.isfinite(self.Hs).all())
         return trace
 
     def _train_fused(self, epochs: int, test, verbose,
@@ -718,25 +741,26 @@ class NomadRingEngine:
                     if self._stream is None:
                         self._stream = tuple(map(
                             jnp.asarray, part.epoch_stream(self.br)))
-                    self.Ws, self.Hs, tr = _local_train_stream(
+                    self.Ws, self.Hs, tr, ok = _local_train_stream(
                         self.Ws, self.Hs, self._stream, lrs, rec_pos,
                         self.lam, ridx, cidx, tvals, policy=self.policy,
                         entry=self._entry, n_rec=len(chunk_recs))
                 else:
                     data = (*self._cell_data(), self._perm_src)
-                    self.Ws, self.Hs, tr = _local_train_steps(
+                    self.Ws, self.Hs, tr, ok = _local_train_steps(
                         self.Ws, self.Hs, data, lrs, rec_pos, self.lam,
                         ridx, cidx, tvals, policy=self.policy,
                         entry=self._entry, n_rec=len(chunk_recs))
             else:
                 data = (self.rows, self.cols, self.vals, self.mask)
-                self.Ws, self.Hs, tr = self._spmd_train(
+                self.Ws, self.Hs, tr, ok = self._spmd_train(
                     self.Ws, self.Hs, data, lrs, rec_pos, self.lam,
                     ridx, cidx, tvals, policy=self.policy,
                     n_rec=len(chunk_recs))
             self.epoch_idx += c
             done += c
             tr = np.asarray(tr)        # the block's single host sync
+            self.last_finite = bool(ok)   # rides the same sync
             for j, i in enumerate(chunk_recs):
                 trace.append((start + i, float(tr[j])))
                 if verbose:

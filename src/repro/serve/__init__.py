@@ -9,12 +9,12 @@
 * :mod:`~repro.serve.server` — :class:`RecServer`: microbatching
   request front end; boots from a ``save_fit_result`` checkpoint.
 """
-from .server import Recommendation, RecServer, ServeConfig
+from .server import Recommendation, RecServer, ServeConfig, ServeTimeout
 from .store import FactorStore, FactorView, quantize_int8
 from .topk import topk_dense_oracle, topk_scores, topk_scores_filtered
 
 __all__ = [
     "FactorStore", "FactorView", "Recommendation", "RecServer",
-    "ServeConfig", "quantize_int8", "topk_dense_oracle", "topk_scores",
-    "topk_scores_filtered",
+    "ServeConfig", "ServeTimeout", "quantize_int8", "topk_dense_oracle",
+    "topk_scores", "topk_scores_filtered",
 ]

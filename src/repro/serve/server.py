@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import List, Optional, Sequence, Union
 
@@ -36,7 +37,13 @@ from ..kernels.policy import KernelPolicy
 from .store import FactorStore, FactorView
 from .topk import topk_scores, topk_scores_filtered
 
-__all__ = ["ServeConfig", "Recommendation", "RecServer"]
+__all__ = ["ServeConfig", "ServeTimeout", "Recommendation", "RecServer"]
+
+
+class ServeTimeout(TimeoutError):
+    """A queued request's deadline (``ServeConfig.timeout_ms``) expired
+    before its microbatch was scored; the request was shed instead of
+    being served arbitrarily stale."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +63,11 @@ class ServeConfig:
                     the results, exactly; users with no map entry are
                     unfiltered.  Lists short of ``top_k`` admissible
                     items pad with item id -1 / -inf score.
+    timeout_ms   -- request deadline: a queued request older than this
+                    when its microbatch is assembled is shed with a
+                    typed :class:`ServeTimeout` instead of being served
+                    late (fail-fast under overload; ``None`` = wait
+                    forever, the pre-deadline behavior)
     """
     top_k: int = 10
     max_batch: int = 64
@@ -63,6 +75,7 @@ class ServeConfig:
     item_tile: int = 4096
     kernel: Union[str, KernelPolicy] = "auto"
     filter_rated: bool = False
+    timeout_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.top_k < 1:
@@ -73,6 +86,10 @@ class ServeConfig:
         if self.max_wait_ms < 0:
             raise ValueError(
                 f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.timeout_ms is not None and self.timeout_ms <= 0:
+            raise ValueError(
+                f"timeout_ms must be > 0 (or None), got "
+                f"{self.timeout_ms}")
         if self.item_tile < 1:
             raise ValueError(
                 f"item_tile must be >= 1, got {self.item_tile}")
@@ -110,6 +127,7 @@ class RecServer:
         self._stop = object()           # queue sentinel
         self.n_queries = 0              # users answered (worker thread)
         self.n_batches = 0              # microbatches scored
+        self.n_shed = 0                 # users shed past their deadline
 
     # ----------------------------------------------------------------- #
     # Synchronous scoring (shared by the worker loop)                    #
@@ -180,7 +198,7 @@ class RecServer:
                 f"request has {len(users)} users > max_batch="
                 f"{self.config.max_batch}")
         fut: "Future[Recommendation]" = Future()
-        self._queue.put((users, fut))
+        self._queue.put((users, fut, time.perf_counter()))
         return fut
 
     def recommend(self, users: Sequence[int],
@@ -218,7 +236,6 @@ class RecServer:
     def _drain_batch(self) -> Optional[List]:
         """Block for the first request, then collect follow-ups until
         the batch is full or ``max_wait_ms`` has passed."""
-        import time
         first = self._queue.get()
         if first is self._stop:
             return None
@@ -241,23 +258,46 @@ class RecServer:
             users += len(nxt[0])
         return batch
 
+    def _shed_expired(self, batch: List) -> List:
+        """Fail requests whose deadline passed while they queued — once
+        shed here they never occupy scorer time (the fail-fast half of
+        the latency contract)."""
+        ttl = self.config.timeout_ms
+        if ttl is None:
+            return batch
+        now, live = time.perf_counter(), []
+        for req in batch:
+            users, fut, t_in = req
+            waited_ms = (now - t_in) * 1e3
+            if waited_ms > ttl:
+                self.n_shed += len(users)
+                fut.set_exception(ServeTimeout(
+                    f"request waited {waited_ms:.1f} ms in queue > "
+                    f"timeout_ms={ttl}"))
+            else:
+                live.append(req)
+        return live
+
     def _worker(self):
         while True:
             batch = self._drain_batch()
             if batch is None:
                 return
+            batch = self._shed_expired(batch)
+            if not batch:
+                continue
             view = self.store.view()    # ONE version for the whole batch
-            users = np.concatenate([u for u, _ in batch])
+            users = np.concatenate([u for u, _, _ in batch])
             try:
                 rec = self.score(users, view=view)
             except Exception as e:      # noqa: BLE001 — fail the futures
-                for _, fut in batch:
+                for _, fut, _ in batch:
                     fut.set_exception(e)
                 continue
             self.n_batches += 1
             self.n_queries += len(users)
             off = 0
-            for u, fut in batch:
+            for u, fut, _ in batch:
                 sl = slice(off, off + len(u))
                 fut.set_result(Recommendation(
                     users=rec.users[sl], items=rec.items[sl],

@@ -223,6 +223,17 @@ class FactorStore:
         if quantize not in (None, "int8"):
             raise ValueError(
                 f"quantize must be None or 'int8', got {quantize!r}")
+        # integrity gate (DESIGN.md §14): a diverged round's factors
+        # must never go live — NaN rows would poison every score of the
+        # version.  Checked before quantization (int8 of NaN is garbage
+        # with no NaN left to detect).
+        for name, A in (("W", W), ("H", H)):
+            A = np.asarray(A)
+            if np.issubdtype(A.dtype, np.floating) \
+                    and not np.isfinite(A).all():
+                raise ValueError(
+                    f"refusing to publish non-finite {name}; quarantine "
+                    "the diverged round (DivergencePolicy) instead")
         w_scale = h_scale = None
         if quantize == "int8":
             Wq, w_scale = quantize_int8(W)

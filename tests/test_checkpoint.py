@@ -299,3 +299,109 @@ def test_restore_under_old_p_resumes_under_new_p(tmp_path):
     assert a.config.p == 2
     np.testing.assert_array_equal(Wa, Wb)
     np.testing.assert_array_equal(Ha, Hb)
+
+
+# --------------------------------------------------------------------- #
+# Integrity: per-array checksum manifest, quarantine, verified fallback  #
+# (DESIGN.md §14)                                                        #
+# --------------------------------------------------------------------- #
+
+def test_manifest_written_and_verifies(tmp_path):
+    from repro.checkpoint import verify_checkpoint
+    save_checkpoint(str(tmp_path), 3, _tree())
+    assert os.path.exists(tmp_path / "step_00000003" / "manifest.json")
+    assert verify_checkpoint(str(tmp_path), 3)
+
+
+def test_bitflip_fails_verification_and_quarantines(tmp_path):
+    from repro.checkpoint import (committed_steps, latest_verified_step,
+                                  verify_checkpoint)
+    from repro.runtime.chaos import bitflip_checkpoint
+    save_checkpoint(str(tmp_path), 1, _tree(1))
+    save_checkpoint(str(tmp_path), 2, _tree(2))
+    assert bitflip_checkpoint(str(tmp_path), seed=0) == 2
+    assert not verify_checkpoint(str(tmp_path), 2)
+    assert verify_checkpoint(str(tmp_path), 1)
+    # fallback quarantines the corrupt step and lands on the verified one
+    assert latest_verified_step(str(tmp_path)) == 1
+    assert os.path.isdir(tmp_path / "step_00000002.corrupt")
+    assert committed_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_restore_falls_back_past_corruption(tmp_path):
+    from repro.checkpoint import CorruptCheckpointError
+    from repro.runtime.chaos import bitflip_checkpoint
+    t1, t2 = _tree(1), _tree(2)
+    save_checkpoint(str(tmp_path), 1, t1)
+    save_checkpoint(str(tmp_path), 2, t2)
+    bitflip_checkpoint(str(tmp_path), seed=0, step=2)
+    # explicitly requesting the corrupted step is a hard error
+    with pytest.raises(CorruptCheckpointError):
+        restore_checkpoint(str(tmp_path), t1, step=2)
+    restored, step = restore_checkpoint(str(tmp_path), t1)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_corrupted_latest_never_boots_fit_result(tmp_path, tiny_mc_problem):
+    """The serving-boot contract under corruption: FactorStore boots
+    from the newest *verified* step, never from a bitflipped one."""
+    from repro import api
+    from repro.runtime.chaos import bitflip_checkpoint
+    from repro.serve import FactorStore
+    pr = tiny_mc_problem
+    rows, cols, vals = pr["train"]
+    prob = api.MCProblem(rows=rows, cols=cols, vals=vals, m=pr["m"],
+                         n=pr["n"])
+    cfg = api.NomadConfig(k=4, p=2, epochs=1, seed=0)
+    r1 = api.solve(prob, cfg)
+    r2 = api.solve(prob, dataclasses.replace(cfg, epochs=2))
+    save_fit_result(str(tmp_path), 1, r1)
+    save_fit_result(str(tmp_path), 2, r2)
+    bitflip_checkpoint(str(tmp_path), seed=3)
+    store = FactorStore.from_checkpoint(str(tmp_path))
+    assert store.boot_step == 1
+    np.testing.assert_array_equal(np.asarray(store.view().W),
+                                  np.asarray(r1.W))
+
+
+def test_all_checkpoints_corrupt_restores_nothing(tmp_path):
+    from repro.runtime.chaos import bitflip_checkpoint
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bitflip_checkpoint(str(tmp_path), seed=0, step=1)
+    restored, step = restore_checkpoint(str(tmp_path), _tree())
+    assert restored is None and step is None
+    assert os.path.isdir(tmp_path / "step_00000001.corrupt")
+
+
+def test_verify_missing_manifest_is_backwards_compatible(tmp_path):
+    """Pre-integrity checkpoints (no manifest.json) still verify: the
+    layer must not brick existing checkpoint dirs."""
+    from repro.checkpoint import verify_checkpoint
+    save_checkpoint(str(tmp_path), 4, _tree())
+    os.remove(tmp_path / "step_00000004" / "manifest.json")
+    assert verify_checkpoint(str(tmp_path), 4)
+    restored, step = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 4
+
+
+def test_config_codec_roundtrips_integrity_types(tmp_path):
+    from repro import api
+    link = api.DegradedLink(
+        events=(api.LinkEvent("drop", t0=1.0, t1=9.0, prob=0.5),),
+        dup=0.1, delay_factor=3.0)
+    cfg = api.AsyncSimConfig(k=4, p=3, epochs=1.0, seed=0,
+                             transport=api.TransportConfig(max_retries=7),
+                             link_faults=link)
+    prob = api.MCProblem.synthetic(30, 15, 200, k=4, seed=0)
+    res = api.solve(prob, cfg)
+    save_fit_result(str(tmp_path), 1, res)
+    restored, _ = restore_fit_result(str(tmp_path))
+    rc = restored.config
+    assert rc.transport == cfg.transport
+    assert rc.link_faults.events == link.events
+    assert rc.link_faults.rates == link.rates
+    assert rc.link_faults.delay_factor == link.delay_factor

@@ -113,9 +113,10 @@ def test_steps_driver_matches_loop_too():
     rec_pos = jnp.asarray(np.arange(4, dtype=np.int32))
     ridx, cidx, tvals = eng2._eval_args(problem.test)
     data = (*eng2._cell_data(), eng2._perm_src)
-    Ws, Hs, tr = nomad._local_train_steps(
+    Ws, Hs, tr, ok = nomad._local_train_steps(
         eng2.Ws, eng2.Hs, data, lrs, rec_pos, eng2.lam, ridx, cidx,
         tvals, policy=eng2.policy, entry=eng2._entry, n_rec=4)
+    assert bool(ok)
     eng2.Ws, eng2.Hs = Ws, Hs
     Wf, Hf = eng2.factors()
     assert np.array_equal(Wl, Wf)

@@ -448,3 +448,258 @@ def test_monitor_ejects_straggler_via_session():
         assert flagged == [2]
         assert sess.config.p == 3
         sess.fit()
+
+
+# --------------------------------------------------------------------- #
+# Integrity layer (DESIGN.md §14): seeded integrity scripts, the chaos   #
+# gauntlet under corruption, log compaction, divergence quarantine       #
+# --------------------------------------------------------------------- #
+
+@pytest.mark.chaos
+def test_seeded_script_integrity_event_kinds():
+    """seeded_script covers the new integrity kinds — deterministically
+    per seed, and with zero rate the historical scripts are unchanged
+    bitwise."""
+    from repro.runtime.chaos import ACTIONS, seeded_script
+    assert seeded_script(7, 12, 4) == seeded_script(7, 12, 4)
+    assert all(e.action not in ("bitflip", "nan")
+               for e in seeded_script(7, 12, 4))
+    evs = seeded_script(11, 60, 4, bitflip_prob=0.25, nan_prob=0.25)
+    kinds = {e.action for e in evs}
+    assert "bitflip" in kinds and "nan" in kinds
+    assert all(e.action in ACTIONS for e in evs)
+    assert evs == seeded_script(11, 60, 4, bitflip_prob=0.25,
+                                nan_prob=0.25)
+
+
+@pytest.mark.chaos
+def test_link_event_and_degraded_link_validation():
+    from repro.runtime.chaos import DegradedLink, LinkEvent
+    with pytest.raises(ValueError):
+        LinkEvent("teleport")
+    with pytest.raises(ValueError):
+        LinkEvent("drop", t0=5.0, t1=5.0)
+    with pytest.raises(ValueError):
+        DegradedLink(drop=1.0)
+    with pytest.raises(TypeError):
+        DegradedLink(events=("drop",))
+    ev = LinkEvent("corrupt", t0=10.0, t1=20.0, src=1)
+    assert ev.matches(1, 3, 15.0)
+    assert not ev.matches(2, 3, 15.0)
+    assert not ev.matches(1, 3, 25.0)
+
+
+@pytest.mark.chaos
+def test_integrity_gauntlet_recovers():
+    """The deterministic integrity gauntlet: checkpoint bitflips, a NaN
+    injection, kills and a join in one script.  The session must
+    quarantine corrupted steps, boot recoveries from the previous
+    verified checkpoint, roll the NaN round back via DivergencePolicy,
+    and end in a finite, exactly-serializable state."""
+    import os as _os
+
+    import jax.numpy as jnp
+    from repro.api import DivergencePolicy, FaultPolicy, StreamingSession
+    from repro.core import serial
+    from repro.runtime.chaos import ChaosEvent, ChaosHarness
+    # the NaN injection comes after the last kill: a kill recovery
+    # resets session.history, and the rollback evidence must survive
+    # to the end of the gauntlet
+    events = [
+        ChaosEvent(1, "slow", 1, factor=2.0),
+        ChaosEvent(2, "bitflip"),
+        ChaosEvent(2, "kill", 2),
+        ChaosEvent(3, "join"),
+        ChaosEvent(4, "bitflip"),
+        ChaosEvent(4, "kill", 0),
+        ChaosEvent(5, "nan"),
+    ]
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d:
+        sess = StreamingSession(
+            prob, _nomad_cfg(),
+            faults=FaultPolicy(
+                checkpoint_dir=d, checkpoint_every=1,
+                divergence=DivergencePolicy(max_rollbacks=3)))
+        sess.fit()
+        report = ChaosHarness(sess, events, seed=5).run()
+        assert np.isfinite(report.rmse).all()
+        # the bitflipped checkpoints were quarantined on recovery
+        assert any(f.endswith(".corrupt") for f in _os.listdir(d))
+        # the NaN round was rolled back rather than published
+        rolls = [r.extras["divergence"].get("rollbacks", 0)
+                 for r in sess.history if "divergence" in r.extras]
+        assert any(n > 0 for n in rolls)
+        W, H = sess._eng.factors()
+        assert np.isfinite(W).all() and np.isfinite(H).all()
+        # and the state the gauntlet left behind is still exactly
+        # serializable against its schedule-order witness
+        order = sess._eng.br.schedule_order()
+        epoch = int(sess.result.epochs_done)
+        sess.fit(epochs=1)
+        lr = sess.config.make_stepsize()
+        Wr, Hr = serial.replay_jax(
+            jnp.asarray(W), jnp.asarray(H), sess.problem.rows,
+            sess.problem.cols, sess.problem.vals, order, lr(epoch),
+            sess.config.lam)
+        W1, H1 = sess._eng.factors()
+        np.testing.assert_allclose(np.asarray(Wr), W1, rtol=5e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(Hr), H1, rtol=5e-5,
+                                   atol=1e-5)
+
+
+@pytest.mark.chaos
+def test_log_compaction_bounds_log_and_stays_bitwise():
+    """Satellite regression: a long-lived session's kill-recovery log is
+    bounded by the retained checkpoints (not the session age), and a
+    kill after compaction still lands bitwise on the graceful run."""
+    from repro.api import FaultPolicy, StreamingSession
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d:
+        a = StreamingSession(
+            prob, _nomad_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d, checkpoint_every=1,
+                               keep=2))
+        b = StreamingSession(prob, _nomad_cfg())
+        for s in (a, b):
+            for _ in range(7):
+                s.fit()
+        assert a._base_round >= 5          # compacted past round 5
+        assert len(a._replay_log) <= 2     # bounded by keep
+        a.kill(1)
+        b.resize(leave=(1,))
+        Wa, Ha = a._eng.factors()
+        Wb, Hb = b._eng.factors()
+        assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+        ra, rb = a.fit(epochs=1), b.fit(epochs=1)
+        assert np.array_equal(ra.W, rb.W)
+        assert np.array_equal(ra.trace_rmse, rb.trace_rmse)
+
+
+@pytest.mark.chaos
+def test_compacted_log_recovers_past_corrupted_newest():
+    """Corruption + compaction compose: with the newest checkpoint
+    bitflipped, recovery falls back to an older retained verified step
+    (>= the compaction base) and still equals the graceful run."""
+    from repro.api import FaultPolicy, StreamingSession
+    from repro.runtime.chaos import bitflip_checkpoint
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d:
+        a = StreamingSession(
+            prob, _nomad_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d, checkpoint_every=1,
+                               keep=3))
+        b = StreamingSession(prob, _nomad_cfg())
+        for s in (a, b):
+            for _ in range(6):
+                s.fit()
+        assert a._base_round > 0
+        assert bitflip_checkpoint(d, seed=1) is not None
+        a.kill(2)
+        b.resize(leave=(2,))
+        Wa, Ha = a._eng.factors()
+        Wb, Hb = b._eng.factors()
+        assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+
+
+def _divergent_cfg(**kw):
+    from repro.core.stepsize import PowerSchedule
+    return _nomad_cfg(stepsize=PowerSchedule(alpha=1e6, beta=0.0), **kw)
+
+
+@pytest.mark.chaos
+def test_divergence_policy_rolls_back_session_round():
+    """A step size large enough to blow up f32 trips the on-device
+    sentinel; the policy backs alpha off and the round completes with
+    finite factors."""
+    from repro.api import DivergencePolicy, FaultPolicy, StreamingSession
+    with tempfile.TemporaryDirectory() as d:
+        sess = StreamingSession(
+            _mc_problem(), _divergent_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d,
+                               divergence=DivergencePolicy(
+                                   max_rollbacks=4, backoff=1e-4)))
+        res = sess.fit()
+        assert res.extras["divergence"]["finite"]
+        assert res.extras["divergence"]["rollbacks"] >= 1
+        assert np.isfinite(np.asarray(res.W)).all()
+
+
+@pytest.mark.chaos
+def test_divergence_policy_exhaustion_raises():
+    from repro.api import (DivergenceError, DivergencePolicy, FaultPolicy,
+                           StreamingSession)
+    with tempfile.TemporaryDirectory() as d:
+        sess = StreamingSession(
+            _mc_problem(), _divergent_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d,
+                               divergence=DivergencePolicy(
+                                   max_rollbacks=1, backoff=0.99)))
+        with pytest.raises(DivergenceError):
+            sess.fit()
+
+
+@pytest.mark.chaos
+def test_divergence_rollbacks_replay_identically_through_kill():
+    """Divergence detection is deterministic, so a kill-recovery replay
+    re-trips and re-backs-off identically — the recovered run equals the
+    graceful twin bitwise even when rounds diverged."""
+    from repro.api import DivergencePolicy, FaultPolicy, StreamingSession
+    div = DivergencePolicy(max_rollbacks=3, backoff=1e-4)
+    prob = _mc_problem()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        a = StreamingSession(
+            prob, _divergent_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d1, checkpoint_every=100,
+                               divergence=div))
+        b = StreamingSession(
+            prob, _divergent_cfg(),
+            faults=FaultPolicy(checkpoint_dir=d2, checkpoint_every=100,
+                               divergence=div))
+        for s in (a, b):
+            s.fit()
+            s.fit()
+        a.kill(1)              # no checkpoint yet: cold replay re-trips
+        b.resize(leave=(1,))
+        Wa, Ha = a._eng.factors()
+        Wb, Hb = b._eng.factors()
+        assert np.array_equal(Wa, Wb) and np.array_equal(Ha, Hb)
+
+
+def test_divergence_policy_validation():
+    from repro.api import DivergencePolicy, FaultPolicy
+    with pytest.raises(ValueError):
+        DivergencePolicy(max_rollbacks=0)
+    with pytest.raises(ValueError):
+        DivergencePolicy(backoff=1.0)
+    with pytest.raises(ValueError):
+        DivergencePolicy(spike_factor=0.5)
+    with pytest.raises(TypeError):
+        FaultPolicy(checkpoint_dir="/tmp/x", divergence="strict")
+
+
+@pytest.mark.chaos
+def test_solve_divergence_rollback_and_exhaustion():
+    """The batch path: solve(..., faults=) rolls a diverged chunk back
+    to the last good checkpoint with a backed-off alpha, and raises
+    DivergenceError when the budget runs out."""
+    from repro import api
+    from repro.core.stepsize import PowerSchedule
+    prob = _mc_problem()
+    cfg = _nomad_cfg(epochs=2,
+                     stepsize=PowerSchedule(alpha=1e6, beta=0.0))
+    with tempfile.TemporaryDirectory() as d:
+        res = api.solve(prob, cfg, faults=api.FaultPolicy(
+            checkpoint_dir=d, checkpoint_every=1,
+            divergence=api.DivergencePolicy(max_rollbacks=4,
+                                            backoff=1e-4)))
+        assert np.isfinite(np.asarray(res.W)).all()
+        assert res.extras["divergence"]["rollbacks"] >= 1
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(api.DivergenceError):
+            api.solve(prob, cfg, faults=api.FaultPolicy(
+                checkpoint_dir=d, checkpoint_every=1,
+                divergence=api.DivergencePolicy(max_rollbacks=1,
+                                                backoff=0.99)))

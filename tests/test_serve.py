@@ -478,3 +478,77 @@ def test_quantize_int8_contract():
     assert np.max(np.abs(q), axis=1).tolist() == [0, 127, 127]
     np.testing.assert_allclose(q.astype(np.float32) * s[:, None], A,
                                atol=np.max(np.abs(A)) / 254 + 1e-7)
+
+
+# --------------------------------------------------------------------- #
+# Integrity layer (DESIGN.md §14): request deadlines + publish guard     #
+# --------------------------------------------------------------------- #
+
+def test_serve_timeout_config_validates():
+    import dataclasses as _dc
+    with pytest.raises(ValueError):
+        ServeConfig(timeout_ms=0)
+    with pytest.raises(ValueError):
+        ServeConfig(timeout_ms=-5.0)
+    assert ServeConfig().timeout_ms is None
+    assert _dc.replace(ServeConfig(), timeout_ms=50.0).timeout_ms == 50.0
+
+
+def test_expired_request_is_shed_with_typed_error():
+    """A request that out-waits timeout_ms in the queue fails fast with
+    ServeTimeout instead of being served stale."""
+    import time as _time
+
+    from repro.serve import ServeTimeout
+    store = _rand_store()
+    srv = RecServer(store, ServeConfig(top_k=3, timeout_ms=0.001,
+                                       max_wait_ms=0.0))
+    with srv:
+        _time.sleep(0.01)           # let the worker block on get()
+        fut = srv.submit([1, 2])
+        with pytest.raises(ServeTimeout):
+            fut.result(timeout=5)
+        assert srv.n_shed == 2
+    # generous deadline: everything is served
+    srv2 = RecServer(store, ServeConfig(top_k=3, timeout_ms=60_000.0))
+    with srv2:
+        rec = srv2.recommend([0, 1], timeout=30)
+        assert rec.items.shape == (2, 3)
+        assert srv2.n_shed == 0
+
+
+def test_shed_request_never_counts_as_answered():
+    import time as _time
+
+    from repro.serve import ServeTimeout
+    store = _rand_store()
+    srv = RecServer(store, ServeConfig(top_k=3, timeout_ms=0.001,
+                                       max_wait_ms=0.0))
+    with srv:
+        _time.sleep(0.01)
+        fut = srv.submit([4])
+        with pytest.raises(ServeTimeout):
+            fut.result(timeout=5)
+        assert srv.n_queries == 0 and srv.n_batches == 0
+
+
+def test_publish_refuses_non_finite_factors():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(10, 3)).astype(np.float32)
+    H = rng.normal(size=(6, 3)).astype(np.float32)
+    Wbad = W.copy()
+    Wbad[2, 1] = np.nan
+    Hbad = H.copy()
+    Hbad[0, 0] = np.inf
+    store = FactorStore()
+    with pytest.raises(ValueError, match="non-finite W"):
+        store.publish(Wbad, H)
+    with pytest.raises(ValueError, match="non-finite H"):
+        store.publish(W, Hbad)
+    # a poisoned publish must not advance the version
+    assert store.version is None
+    store.publish(W, H)
+    assert store.version == 0
+    with pytest.raises(ValueError):
+        store.publish(Wbad, H, quantize="int8")   # caught pre-quantize
+    assert store.version == 0

@@ -1,0 +1,205 @@
+"""Integrity layer, transport half (DESIGN.md §14): sequence-numbered,
+CRC32-checksummed envelopes with at-least-once retransmission and
+receiver-side dedup carry every nomadic item.  The headline property:
+under ANY seeded link-fault script (drop / duplicate / reorder /
+corrupt / delay), no item is ever lost or double-applied and the
+execution stays bitwise exactly-serializable; with faults off, the
+envelope path is bitwise-identical to the plain simulator.
+"""
+import numpy as np
+import pytest
+import strategies
+from hypothesis_compat import given, settings, st
+
+from repro.core import objective, serial
+from repro.core.async_sim import NomadSimulator, SimConfig
+from repro.core.stepsize import PowerSchedule
+from repro.runtime.chaos import DegradedLink, LinkEvent, seeded_link_script
+from repro.runtime.transport import (Envelope, ItemLedger, TransportConfig,
+                                     decode_item, encode_item, seal)
+
+
+# --------------------------------------------------------------------- #
+# Envelope / ledger units                                                #
+# --------------------------------------------------------------------- #
+
+def test_envelope_roundtrip_and_crc():
+    env = seal(src=1, dst=2, seq=7, payload=encode_item(42, 3))
+    assert env.verify()
+    assert decode_item(env.payload) == (42, 3)
+    # any single bit flip in the payload is caught
+    for bit in range(8 * len(env.payload)):
+        assert not env.corrupted(bit).verify(), f"bit {bit} undetected"
+
+
+def test_envelope_corrupted_is_pure():
+    env = seal(src=0, dst=1, seq=0, payload=encode_item(5, 0))
+    bad = env.corrupted(3)
+    assert env.verify() and not bad.verify()
+    assert bad.seq == env.seq and bad.crc == env.crc
+
+
+def test_retry_delay_backoff():
+    t = TransportConfig(backoff=2.0, max_retries=4)
+    base = 10.0
+    delays = [t.retry_delay(base, a) for a in (1, 2, 3)]
+    assert delays == [10.0, 20.0, 40.0]
+
+
+def test_transport_config_validation():
+    with pytest.raises(ValueError):
+        TransportConfig(max_retries=0)
+    with pytest.raises(ValueError):
+        TransportConfig(backoff=0.5)
+    with pytest.raises(ValueError):
+        TransportConfig(timeout=-1.0)
+
+
+def test_ledger_exactly_once():
+    led = ItemLedger(3)
+    v1 = led.launch(1)
+    assert led.accept(1, v1)            # first copy applies
+    assert not led.accept(1, v1)        # duplicate discarded
+    v2 = led.launch(1)                  # item re-circulates
+    assert not led.accept(1, v1)        # stale old-version copy
+    assert led.accept(1, v2)
+    s = led.stats.as_dict()
+    assert s["sent"] == 2 and s["delivered"] == 2
+    assert s["duplicates"] == 1 and s["stale"] == 1
+
+
+# --------------------------------------------------------------------- #
+# Simulator integration                                                  #
+# --------------------------------------------------------------------- #
+
+def _sim(cfg, seed=0, m=40, n=20, nnz=300, k=4):
+    rows, cols, vals = strategies.coo_problem(seed, m, n, nnz)
+    W0, H0 = objective.init_factors_np(seed, m, n, k)
+    sim = NomadSimulator(cfg, m, n, rows, cols, vals, W0, H0)
+    return sim.run(), (rows, cols, vals, W0, H0)
+
+
+def _replay(res, rows, cols, vals, W0, H0, sched, lam):
+    order_idx = sorted(range(len(res.update_log)),
+                       key=lambda t: (res.update_log[t][0], t))
+    order = np.array([res.update_log[t][1] for t in order_idx])
+    cnt = {}
+    lrs = np.empty(len(order))
+    for t, g in enumerate(order):
+        c = cnt.get(g, 0)
+        lrs[t] = sched(c)
+        cnt[g] = c + 1
+    return serial.replay_np(W0, H0, rows, cols, vals, order, lrs, lam)
+
+
+_SCHED = PowerSchedule(alpha=0.02, beta=0.1)
+
+
+def _cfg(**kw):
+    kw.setdefault("p", 4)
+    kw.setdefault("k", 4)
+    kw.setdefault("lam", 0.01)
+    kw.setdefault("schedule", _SCHED)
+    kw.setdefault("epochs", 2.0)
+    kw.setdefault("seed", 0)
+    return SimConfig(**kw)
+
+
+def test_envelope_only_path_is_bitwise_identical():
+    """transport= without link faults prices every hop through the same
+    envelope seal/verify but must not move a single event: W, H and the
+    serializability witness are bitwise those of the plain run."""
+    plain, _ = _sim(_cfg())
+    sealed, _ = _sim(_cfg(transport=TransportConfig()))
+    assert np.array_equal(plain.W, sealed.W)
+    assert np.array_equal(plain.H, sealed.H)
+    assert plain.update_log == sealed.update_log
+    assert sealed.transport is not None
+    assert sealed.transport["corrupt"] == 0
+    assert sealed.transport["dropped"] == 0
+    assert sealed.transport["duplicates"] == 0
+    # only items still on the wire at the horizon go undelivered
+    assert 0 < sealed.transport["delivered"] <= sealed.transport["sent"]
+    assert plain.transport is None
+
+
+def test_degraded_link_delivers_and_serializes():
+    link = DegradedLink(drop=0.15, dup=0.1, reorder=0.1, corrupt=0.1,
+                        delay=0.1)
+    res, (rows, cols, vals, W0, H0) = _sim(
+        _cfg(transport=TransportConfig(), link_faults=link))
+    s = res.transport
+    assert s["dropped"] > 0 and s["duplicates"] > 0 and s["corrupt"] > 0
+    assert s["retransmits"] > 0
+    assert res.n_updates > 0
+    Wr, Hr = _replay(res, rows, cols, vals, W0, H0, _SCHED, 0.01)
+    assert np.array_equal(Wr, res.W)
+    assert np.array_equal(Hr, res.H)
+
+
+def test_link_without_transport_config_defaults():
+    """link_faults= alone auto-enables the checksummed transport."""
+    res, _ = _sim(_cfg(link_faults=DegradedLink(drop=0.2)))
+    assert res.transport is not None and res.transport["dropped"] > 0
+
+
+def test_scripted_blackout_window_recovers():
+    """A total drop window on every link: retransmission timers must
+    carry every in-flight item across the blackout."""
+    link = DegradedLink(events=(LinkEvent("drop", t0=20.0, t1=60.0,
+                                          prob=1.0),))
+    res, (rows, cols, vals, W0, H0) = _sim(
+        _cfg(transport=TransportConfig(), link_faults=link))
+    assert res.transport["dropped"] > 0
+    Wr, Hr = _replay(res, rows, cols, vals, W0, H0, _SCHED, 0.01)
+    assert np.array_equal(Wr, res.W)
+    assert np.array_equal(Hr, res.H)
+
+
+@pytest.mark.chaos
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(2, 6))
+def test_any_fault_script_stays_serializable(seed, p):
+    """The headline property: ANY seeded fault script (scripted windows
+    + background rates + a worker failure and a rejoin) still yields an
+    exactly-serializable history, bitwise."""
+    link = DegradedLink(events=tuple(seeded_link_script(seed, 400.0, p=p)),
+                        drop=0.1, dup=0.08, reorder=0.08, corrupt=0.08,
+                        delay=0.08)
+    cfg = _cfg(p=p, seed=seed, transport=TransportConfig(),
+               link_faults=link, failures=((60.0, 0),),
+               rejoins=((150.0, 1),))
+    res, (rows, cols, vals, W0, H0) = _sim(cfg, seed=seed)
+    assert res.n_updates > 0
+    Wr, Hr = _replay(res, rows, cols, vals, W0, H0, _SCHED, 0.01)
+    assert np.array_equal(Wr, res.W)
+    assert np.array_equal(Hr, res.H)
+
+
+# --------------------------------------------------------------------- #
+# API surface                                                            #
+# --------------------------------------------------------------------- #
+
+def test_solve_exposes_transport_stats():
+    from repro import api
+    prob = api.MCProblem.synthetic(40, 20, 300, k=4, seed=0)
+    cfg = api.AsyncSimConfig(k=4, p=3, epochs=2.0, seed=0,
+                             transport=api.TransportConfig(),
+                             link_faults=api.DegradedLink(drop=0.1))
+    res = api.solve(prob, cfg)
+    st_ = res.extras["transport"]
+    assert st_["sent"] > 0 and st_["delivered"] > 0
+    plain = api.solve(prob, api.AsyncSimConfig(k=4, p=3, epochs=2.0,
+                                               seed=0))
+    assert "transport" not in plain.extras
+
+
+def test_asyncsim_config_validates_transport_types():
+    from repro import api
+    with pytest.raises(TypeError):
+        api.AsyncSimConfig(k=4, transport="fast")
+    with pytest.raises(TypeError):
+        api.AsyncSimConfig(k=4, link_faults={"drop": 0.5})
+    with pytest.raises(ValueError):
+        api.AsyncSimConfig(k=4, mode="dsgd", link_faults=api.DegradedLink(
+            drop=0.1))
